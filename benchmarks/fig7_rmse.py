@@ -1,0 +1,46 @@
+"""Paper Fig. 7: RMSE comparison — DSC vs S2T-Clustering vs TraClus across
+dataset portions (25/50/75/100%), on lane traffic with weak associates."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, time_fn
+from repro.core.baselines.s2t import s2t_clustering
+from repro.core.baselines.traclus import traclus
+from repro.core.dsc import run_dsc
+from repro.core.evaluation import rmse_sim_based, rmse_traclus
+from repro.core.types import DSCParams
+from repro.data.synthetic import crossing_scenario
+
+
+def run():
+    eps_sp = 0.42
+    results = {}
+    for frac, n_per in [(0.25, 2), (0.5, 3), (0.75, 5), (1.0, 6)]:
+        batch, _, _ = crossing_scenario(n_per_route=n_per,
+                                        points_per_leg=16,
+                                        n_crossers=max(2, n_per),
+                                        n_fringe=max(2, n_per // 2),
+                                        seed=2)
+        params = DSCParams(eps_sp=eps_sp, eps_t=1.0, delta_t=6.0, w=5,
+                           tau=0.2, alpha_sigma=0.0, k_sigma=-1.0,
+                           segmentation="tsa1")
+        secs, out = time_fn(run_dsc, batch, params, iters=1)
+        r_dsc = rmse_sim_based(np.asarray(out.sim),
+                               np.asarray(out.result.member_of),
+                               np.asarray(out.result.is_rep), eps_sp)
+        n_reps = int(np.asarray(out.result.is_rep).sum())
+        s2t = s2t_clustering(batch, eps_sp=eps_sp, eps_t=1.0, w=5, tau=0.2,
+                             n_reps=n_reps)
+        r_s2t = rmse_sim_based(s2t["sim"], s2t["member_of"], s2t["is_rep"],
+                               eps_sp)
+        tc = traclus(batch, eps=0.35, min_lns=3)
+        r_tc = rmse_traclus(tc, eps_sp=eps_sp)
+        results[frac] = (r_dsc, r_s2t, r_tc)
+        csv_row(f"fig7_rmse_{int(frac*100)}pct", secs * 1e6,
+                f"dsc={r_dsc:.4f};s2t={r_s2t:.4f};traclus={r_tc:.4f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Paper Fig. 9 / Table 1: sensitivity analysis — vary each parameter around
+its default; measure execution time and clustering RMSE."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, time_fn
+from repro.core.dsc import run_dsc
+from repro.core.evaluation import rmse_sim_based
+from repro.core.types import DSCParams
+from repro.data.synthetic import ais_like, default_dsc_params_for
+
+# paper Table 1 (values relative to dataset statistics; defaults in bold)
+SWEEPS = {
+    "eps_sp": [0.10, 0.15, 0.20, 0.25, 0.30],        # x diameter%
+    "eps_t": [0.5, 1.0, 1.5, 2.0, 2.5],              # x mean sample dt
+    "delta_t": [0.0, 1.0, 2.0, 3.0, 4.0],            # x mean sample dt
+    "w": [4, 6, 8, 10, 12],
+    "tau": [0.1, 0.2, 0.4, 0.6, 0.8],
+    "alpha_sigma": [-2.0, -1.0, 0.0, 1.0, 2.0],
+    "k_sigma": [-2.0, -1.0, 0.0, 1.0, 2.0],
+}
+DEFAULTS = {"eps_sp": 0.15, "eps_t": 1.0, "delta_t": 0.0, "w": 6,
+            "tau": 0.2, "alpha_sigma": 0.0, "k_sigma": 0.0}
+
+
+def run():
+    batch, _ = ais_like(n_vessels=32, max_points=64, seed=3)
+    diam, mean_dt = default_dsc_params_for(batch)
+
+    def make_params(over):
+        d = dict(DEFAULTS)
+        d.update(over)
+        return DSCParams(
+            eps_sp=d["eps_sp"] * diam, eps_t=d["eps_t"] * mean_dt,
+            delta_t=d["delta_t"] * mean_dt, w=int(d["w"]), tau=d["tau"],
+            alpha_sigma=d["alpha_sigma"], k_sigma=d["k_sigma"])
+
+    results = {}
+    for pname, values in SWEEPS.items():
+        for val in values:
+            params = make_params({pname: val})
+            secs, out = time_fn(run_dsc, batch, params, iters=1)
+            r = rmse_sim_based(np.asarray(out.sim),
+                               np.asarray(out.result.member_of),
+                               np.asarray(out.result.is_rep),
+                               float(params.eps_sp))
+            n_out = int(np.asarray(out.result.is_outlier).sum())
+            results[(pname, val)] = (secs, r)
+            csv_row(f"fig9_{pname}_{val}", secs * 1e6,
+                    f"rmse={r:.4f};outliers={n_out}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

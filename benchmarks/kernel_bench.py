@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs pure-jnp refs.
+
+On CPU, interpret mode measures correctness-path overhead, not TPU speed —
+the derived column therefore reports work sizes (points x candidates, DP
+cells) so TPU projections can be made from the roofline constants.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, time_fn
+from repro.core.geometry import best_match_join
+from repro.core.types import TrajectoryBatch
+from repro.data.synthetic import ais_like
+from repro.kernels.jaccard.ops import window_jaccard
+from repro.kernels.jaccard.ref import jaccard_ref
+from repro.kernels.lcss.ops import lcss_scores
+from repro.kernels.lcss.ref import lcss_ref
+from repro.kernels.stjoin.ops import best_match_join_kernel
+
+
+def run():
+    batch, _ = ais_like(n_vessels=32, max_points=64, seed=1)
+    eps_sp, eps_t = 3.0, 180.0
+
+    secs, _ = time_fn(best_match_join, batch, batch, eps_sp, eps_t, iters=2)
+    work = batch.num_trajs * batch.max_points * batch.num_trajs
+    csv_row("stjoin_ref_jnp", secs * 1e6, f"pairs={work}")
+    secs, _ = time_fn(best_match_join_kernel, batch, batch, eps_sp, eps_t,
+                      iters=2)
+    csv_row("stjoin_pallas_interpret", secs * 1e6, f"pairs={work}")
+
+    rng = np.random.default_rng(0)
+    B, N, M = 8, 64, 64
+    mk = lambda shape: jnp.asarray(rng.normal(0, 3, shape), jnp.float32)
+    rx, ry = mk((B, N)), mk((B, N))
+    rt = jnp.asarray(np.sort(rng.uniform(0, 500, (B, N)), 1), jnp.float32)
+    sx, sy = mk((B, M)), mk((B, M))
+    st = jnp.asarray(np.sort(rng.uniform(0, 500, (B, M)), 1), jnp.float32)
+    ones = jnp.ones((B, N), bool)
+    secs, _ = time_fn(lcss_ref, rx, ry, rt, ones, sx, sy, st, ones,
+                      2.0, 60.0, iters=2)
+    csv_row("lcss_ref_jnp", secs * 1e6, f"dp_cells={B*N*M}")
+    secs, _ = time_fn(lcss_scores, rx, ry, rt, ones, sx, sy, st, ones,
+                      2.0, 60.0, iters=2)
+    csv_row("lcss_pallas_interpret", secs * 1e6, f"dp_cells={B*N*M}")
+
+    T, Mm, W, w = 16, 128, 4, 8
+    masks = jnp.asarray(rng.integers(0, 2**31, (T, Mm, W)).astype(np.uint32))
+    valid = jnp.ones((T, Mm), bool)
+    secs, _ = time_fn(jaccard_ref, masks, w, iters=2)
+    csv_row("jaccard_ref_jnp", secs * 1e6, f"positions={T*Mm};bits={W*32}")
+    secs, _ = time_fn(window_jaccard, masks, valid, w=w, iters=2)
+    csv_row("jaccard_pallas_interpret", secs * 1e6,
+            f"positions={T*Mm};bits={W*32}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,208 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline deliverable).
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun), derives the
+three per-device roofline terms for TPU v5e:
+
+    compute    = FLOPs / 197e12          (bf16 MXU peak per chip)
+    memory     = HBM bytes / 819e9
+    collective = collective bytes / 50e9 (per-ICI-link; 'pod'-axis traffic
+                 crosses DCN and is slower — flagged, not re-priced)
+
+FLOPs / collective bytes are the *loop-corrected* values (scan bodies
+multiplied by trip counts — see repro.launch.hlo_analysis).  HBM bytes take
+XLA's 'bytes accessed' scaled by the same loop-correction ratio; the CPU
+dry-run materializes bf16 ops through f32 converts, so bytes are a ~2x
+UPPER bound on the TPU number (flagged per row, not silently rescaled).
+
+MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference), N = active params —
+the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/replication waste.
+
+Writes results/roofline.csv + results/roofline.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from pathlib import Path
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ROOT = Path(__file__).resolve().parents[1]
+DRYRUN = ROOT / "results" / "dryrun"
+
+
+def model_flops_per_device(rec: dict) -> float:
+    from repro.configs.registry import SHAPES
+    shape = rec.get("shape", "")
+    if shape not in SHAPES:
+        return 0.0
+    sh = SHAPES[shape]
+    n_active = rec.get("active_params") or rec.get("params") or 0
+    devices = rec.get("devices", 1)
+    if sh["kind"] == "train":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        factor = 6.0
+    elif sh["kind"] == "prefill":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        factor = 2.0
+    else:  # decode: one token per sequence
+        tokens = sh["global_batch"]
+        factor = 2.0
+    return factor * n_active * tokens / max(devices, 1)
+
+
+def model_min_bytes_per_device(rec: dict) -> float:
+    """Analytic HBM floor (bf16): the bytes a *perfect* implementation must
+    still move.  train: params read (fwd+bwd) + grad write + Adam moments
+    r/w (f32) ~ 14 B/param + activation stream; prefill: params + KV cache
+    write; decode: params + full KV cache read per token."""
+    from repro.configs.registry import SHAPES, get_arch
+    shape = rec.get("shape", "")
+    if shape not in SHAPES:
+        return 0.0
+    sh = SHAPES[shape]
+    devices = max(rec.get("devices", 1), 1)
+    try:
+        cfg = get_arch(rec["arch"])
+    except Exception:
+        return 0.0
+    n_params = rec.get("params") or 0
+    p_loc = n_params / devices
+    B, L = sh["global_batch"], sh["seq_len"]
+    kv_bytes = 0.0
+    if cfg.n_kv_heads and cfg.family in ("dense", "moe", "vlm", "audio",
+                                         "hybrid"):
+        n_kv_layers = cfg.n_layers if cfg.family != "hybrid" else \
+            cfg.n_layers // (cfg.attn_every or cfg.n_layers)
+        kv_bytes = (2 * n_kv_layers * cfg.n_kv_heads
+                    * cfg.resolved_head_dim * L * B * 2) / devices
+    act_bytes = (B * L * cfg.d_model * 2 * cfg.n_layers) / devices
+    if sh["kind"] == "train":
+        return 14.0 * p_loc + 2 * act_bytes
+    if sh["kind"] == "prefill":
+        return 2.0 * p_loc + kv_bytes + act_bytes
+    # decode: every param + the whole cache, every token
+    return 2.0 * p_loc + kv_bytes
+
+
+def _advice(rec: dict, dom: str, ratio: float) -> str:
+    arch = rec.get("arch", "")
+    if dom == "collective":
+        if "moe" in arch or "qwen" in arch or "moonshot" in arch:
+            return ("overlap EP all_to_all with expert GEMMs "
+                    "(microbatch the dispatch), cut capacity_factor")
+        return ("reduce TP all-reduce volume: 2D-shard activations or "
+                "switch replicated-attention layers to sequence sharding")
+    if dom == "compute":
+        if ratio < 0.2:
+            return ("compute is mostly waste (replicated attention / "
+                    "remat): re-shard heads or batch over 'model'")
+        return "increase per-chip batch or quantize (bf16->int8) the GEMMs"
+    return ("memory-bound: fuse attention (Pallas flash), store KV in "
+            "bf16/int8, or raise arithmetic intensity with larger tiles")
+
+
+def analyze(rec: dict) -> dict | None:
+    if rec.get("status") != "OK":
+        return None
+    flops = float(rec.get("corrected_flops", 0.0))
+    mem_raw = float(rec.get("hbm_traffic_bytes", 0.0))
+    mem_bytes = float(rec.get("hbm_traffic_fused_bytes", 0.0)) or mem_raw
+    if mem_bytes == 0.0:   # legacy record fallback
+        raw_flops = float(rec.get("cost", {}).get("flops", 0.0))
+        raw_bytes = float(rec.get("cost", {}).get("bytes accessed", 0.0))
+        scale = (flops / raw_flops) if raw_flops > 0 and flops > raw_flops \
+            else 1.0
+        mem_bytes = raw_bytes * scale
+    coll = float(rec.get("collective_bytes", 0.0))
+
+    t_c = flops / PEAK_FLOPS
+    t_m = mem_bytes / HBM_BW
+    t_x = coll / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops_per_device(rec)
+    mb = model_min_bytes_per_device(rec)
+    ratio = mf / flops if flops > 0 else 0.0
+    bound = max(t_c, t_m, t_x)
+    # achievable floor: the slower of ideal compute and ideal HBM time
+    t_ideal = max(mf / PEAK_FLOPS, mb / HBM_BW)
+    roofline_frac = t_ideal / bound if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec.get("shape", ""),
+        "mesh": rec["mesh"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom,
+        "model_flops_dev": mf, "hlo_flops_dev": flops,
+        "model_min_bytes_dev": mb, "hbm_bytes_dev": mem_bytes,
+        "hbm_bytes_raw_dev": mem_raw,
+        "useful_ratio": ratio,
+        "roofline_frac": min(roofline_frac, 1.0),
+        "advice": _advice(rec, dom, ratio),
+        "hbm_note": "bytes are CPU-f32/fusion upper bound vs TPU",
+    }
+
+
+_VARIANT_MARKERS = ("_dponly", "_quant", "_cap10", "_ag16", "_rematdots",
+                    "_noremat")
+
+
+def run(write_files: bool = True):
+    rows = []
+    skips = []
+    for f in sorted(glob.glob(str(DRYRUN / "*.json"))):
+        if any(m in Path(f).stem for m in _VARIANT_MARKERS):
+            continue           # §Perf variants live in EXPERIMENTS.md
+        rec = json.loads(Path(f).read_text())
+        if rec.get("status") == "SKIP":
+            skips.append(rec)
+            continue
+        row = analyze(rec)
+        if row:
+            rows.append(row)
+        elif rec.get("status") == "FAIL":
+            skips.append(rec)
+
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    if write_files:
+        out_csv = ROOT / "results" / "roofline.csv"
+        with open(out_csv, "w") as fh:
+            cols = ["arch", "shape", "mesh", "compute_s", "memory_s",
+                    "collective_s", "dominant", "model_flops_dev",
+                    "hlo_flops_dev", "model_min_bytes_dev",
+                    "hbm_bytes_dev", "useful_ratio", "roofline_frac",
+                    "advice"]
+            fh.write(",".join(cols) + "\n")
+            for r in rows:
+                fh.write(",".join(
+                    f"{r[c]:.4e}" if isinstance(r[c], float) else str(r[c])
+                    for c in cols) + "\n")
+
+        md = ROOT / "results" / "roofline.md"
+        with open(md, "w") as fh:
+            fh.write("| arch | shape | mesh | compute s | memory s | "
+                     "collective s | dominant | useful ratio | "
+                     "roofline frac |\n|---|---|---|---|---|---|---|---|"
+                     "---|\n")
+            for r in rows:
+                fh.write(
+                    f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                    f"{r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+                    f"{r['collective_s']:.3e} | {r['dominant']} | "
+                    f"{r['useful_ratio']:.3f} | "
+                    f"{r['roofline_frac']:.3f} |\n")
+            for s in skips:
+                fh.write(f"| {s.get('arch')} | {s.get('shape', '')} | "
+                         f"{s.get('mesh')} | SKIP/FAIL | | | | | |\n")
+    for r in rows:
+        print(f"{r['arch']:>22s} {r['shape']:>12s} {r['mesh']:>6s} "
+              f"dom={r['dominant']:<10s} frac={r['roofline_frac']:.3f} "
+              f"useful={r['useful_ratio']:.3f}")
+    return rows, skips
+
+
+if __name__ == "__main__":
+    run()

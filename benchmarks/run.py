@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure + kernel + roofline.
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.csv_row).
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig7]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark module names")
+    args = ap.parse_args()
+
+    from benchmarks import (fig6_groundtruth, fig7_rmse, fig8_scalability,
+                            fig9_sensitivity, kernel_bench, roofline)
+    modules = {
+        "fig6_groundtruth": fig6_groundtruth.run,
+        "fig7_rmse": fig7_rmse.run,
+        "fig8_scalability": fig8_scalability.run,
+        "fig9_sensitivity": fig9_sensitivity.run,
+        "kernel_bench": kernel_bench.run,
+        "roofline": roofline.run,
+    }
+    failed = []
+    for name, fn in modules.items():
+        if args.only and args.only not in name:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception:                        # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,19 @@
+"""Batched-request serving example: wave-batched engine over a reduced
+gemma2-family model (sliding-window + softcap attention exercised).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    done = serve_main(["--arch", "gemma2-2b", "--requests", "12",
+                       "--slots", "4", "--prompt-len", "24",
+                       "--max-new", "12", "--max-len", "64"])
+    print(f"completed {len(done)} requests; first outputs:")
+    for r in done[:3]:
+        print(f"  req {r.uid}: {r.out}")
+
+
+if __name__ == "__main__":
+    main()

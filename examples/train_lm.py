@@ -1,0 +1,43 @@
+"""End-to-end LM training driver (deliverable (b)): train a model for a few
+hundred steps with checkpointing and restart, and verify the loss drops.
+
+Default is a reduced smollm-family config sized for this CPU container;
+``--preset 100m`` selects a ~100M-parameter config for real hardware
+(identical code path; the full assigned configs are exercised by the
+dry-run on the production mesh).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+import argparse
+import dataclasses
+import sys
+
+from repro.configs import get_arch, reduced_config
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--preset", choices=["tiny", "100m"], default="tiny")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    argv = ["--arch", args.arch, "--steps", str(args.steps),
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+            "--batch", "8", "--seq", "128", "--lr", "3e-3"]
+    if args.preset == "100m":
+        # ~100M params: full smollm-360m width, fewer layers — for real hw
+        argv += ["--full"]
+        print("NOTE: --preset 100m is sized for accelerators; on this CPU "
+              "container it will be slow.")
+    losses = train_main(argv)
+    first, last = sum(losses[:10]) / 10, sum(losses[-10:]) / 10
+    print(f"loss: {first:.3f} -> {last:.3f}")
+    assert last < first, "training did not reduce loss"
+    print("OK: loss decreased; checkpoint written to", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

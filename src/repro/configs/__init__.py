@@ -1,0 +1,5 @@
+from repro.configs.registry import (ARCHITECTURES, DSC_CONFIGS, get_arch,
+                                    get_dsc_config, reduced_config)
+
+__all__ = ["ARCHITECTURES", "DSC_CONFIGS", "get_arch", "get_dsc_config",
+           "reduced_config"]

@@ -1,0 +1,11 @@
+"""Comparison baselines from the paper's experimental study (Sec. 6.2).
+
+These are *centralized* algorithms (the paper's point is precisely that they
+do not scale); they are implemented host-side in NumPy, faithful to their
+original definitions, and used by ``benchmarks/fig6_groundtruth.py`` and
+``benchmarks/fig7_rmse.py``:
+
+  traclus  — TraClus [9]: MDL partitioning + segment-DBSCAN + representative
+  s2t      — S2T-Clustering [20]: voting segmentation + SaCO seeds/clusters
+  toptics  — T-OPTICS [13]: whole-trajectory OPTICS
+"""

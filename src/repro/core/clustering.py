@@ -1,0 +1,116 @@
+"""Greedy SSCR clustering and outlier detection (Algorithm 4).
+
+Semantics (DESIGN.md §2.3): subtrajectories are visited in descending voting
+order; a visited subtrajectory that is *not yet claimed by any cluster* and has
+voting >= k becomes a new representative and claims every adjacent
+subtrajectory with Sim >= alpha that is (a) unclaimed, or (b) claimed with a
+strictly smaller similarity (the reassignment of lines 16-19).  A visited
+unclaimed subtrajectory with voting < k is an outlier.  Representatives are
+never claimed by later representatives.
+
+``alpha`` and ``k`` resolve per partition from the similarity / voting
+distribution as ``mean + sigma * std`` (paper Sec. 6.1) unless absolute
+overrides are provided.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ClusteringResult, DSCParams, SubtrajTable
+
+
+def resolve_thresholds(params: DSCParams, sim: jnp.ndarray,
+                       table: SubtrajTable):
+    """Absolute (alpha, k) from sigma-relative settings (Sec. 6.1)."""
+    pos = (sim > 0.0) & table.valid[:, None] & table.valid[None, :]
+    n_pos = jnp.maximum(jnp.sum(pos), 1)
+    s_mean = jnp.sum(jnp.where(pos, sim, 0.0)) / n_pos
+    s_var = jnp.sum(jnp.where(pos, (sim - s_mean) ** 2, 0.0)) / n_pos
+    alpha = jnp.where(params.alpha_abs >= 0.0, params.alpha_abs,
+                      s_mean + params.alpha_sigma * jnp.sqrt(s_var))
+
+    nv = jnp.maximum(jnp.sum(table.valid), 1)
+    v_mean = jnp.sum(jnp.where(table.valid, table.voting, 0.0)) / nv
+    v_var = jnp.sum(
+        jnp.where(table.valid, (table.voting - v_mean) ** 2, 0.0)) / nv
+    k = jnp.where(params.k_abs >= 0.0, params.k_abs,
+                  v_mean + params.k_sigma * jnp.sqrt(v_var))
+    return alpha, k
+
+
+def cluster(sim: jnp.ndarray, table: SubtrajTable,
+            params: DSCParams) -> ClusteringResult:
+    """Algorithm 4 over a dense similarity matrix.  O(S) sequential steps,
+    each a vectorized [S] claim/reassign update."""
+    S = table.num_slots
+    alpha, k = resolve_thresholds(params, sim, table)
+
+    # visit order: valid slots by voting desc (invalid parked at the end).
+    key = jnp.where(table.valid, table.voting, -jnp.inf)
+    order = jnp.argsort(-key)
+
+    member_of0 = jnp.full((S,), -1, jnp.int32)
+    member_sim0 = jnp.zeros((S,), jnp.float32)
+    is_rep0 = jnp.zeros((S,), bool)
+    slots = jnp.arange(S, dtype=jnp.int32)
+
+    def body(i, state):
+        member_of, member_sim, is_rep = state
+        s = order[i]
+        s_valid = table.valid[s]
+        unclaimed = member_of[s] < 0
+        becomes_rep = s_valid & unclaimed & ~is_rep[s] & (table.voting[s] >= k)
+
+        row = jax.lax.dynamic_slice(sim, (s, 0), (1, S))[0]       # AdjLst of s
+        claim = (becomes_rep
+                 & table.valid
+                 & (row > 0.0)
+                 & (row >= alpha)
+                 & ~is_rep
+                 & (slots != s)
+                 & (row > member_sim))
+        member_of = jnp.where(claim, s, member_of)
+        member_sim = jnp.where(claim, row, member_sim)
+        member_of = member_of.at[s].set(
+            jnp.where(becomes_rep, s, member_of[s]))
+        member_sim = member_sim.at[s].set(
+            jnp.where(becomes_rep, jnp.float32(jnp.inf), member_sim[s]))
+        is_rep = is_rep.at[s].set(is_rep[s] | becomes_rep)
+        return member_of, member_sim, is_rep
+
+    member_of, member_sim, is_rep = jax.lax.fori_loop(
+        0, S, body, (member_of0, member_sim0, is_rep0))
+
+    is_outlier = table.valid & (member_of < 0)
+    return ClusteringResult(
+        member_of=member_of,
+        member_sim=jnp.where(is_rep, jnp.inf, member_sim),
+        is_rep=is_rep, is_outlier=is_outlier,
+        alpha_used=alpha, k_used=k)
+
+
+cluster_jit = jax.jit(cluster)
+
+
+def sscr(result: ClusteringResult, sim: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 3 objective: sum of member->representative similarities."""
+    member = (~result.is_rep) & (result.member_of >= 0)
+    rep = jnp.clip(result.member_of, 0, sim.shape[0] - 1)
+    vals = sim[jnp.arange(sim.shape[0]), rep]
+    return jnp.sum(jnp.where(member, vals, 0.0))
+
+
+def rmse(result: ClusteringResult, sim: jnp.ndarray,
+         eps_sp: float) -> jnp.ndarray:
+    """Intra-cluster RMSE (Sec. 6.2's quality metric).
+
+    Via Lemma 1, a member's mean distance to its representative is
+    ``eps_sp * (1 - Sim)``; RMSE aggregates that over all members.
+    """
+    member = (~result.is_rep) & (result.member_of >= 0)
+    rep = jnp.clip(result.member_of, 0, sim.shape[0] - 1)
+    s = jnp.clip(sim[jnp.arange(sim.shape[0]), rep], 0.0, 1.0)
+    d = eps_sp * (1.0 - s)
+    n = jnp.maximum(jnp.sum(member), 1)
+    return jnp.sqrt(jnp.sum(jnp.where(member, d * d, 0.0)) / n)

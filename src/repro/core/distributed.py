@@ -1,0 +1,337 @@
+"""Distributed Subtrajectory Clustering — the paper's two MapReduce jobs as a
+single jit-compiled ``shard_map`` program (Problem 4).
+
+Mesh axes
+---------
+``part``  : temporal partitions (the paper's equi-depth bins).  On the
+            production mesh this is the folded (pod, data) axes.
+``model`` : candidate-trajectory parallelism — the best-match tensor
+            ``B[point, cand_traj]`` is column-sharded; votes / similarity
+            matrices are psum-reduced.  This is the scale-out lever the
+            paper's per-trajectory reduce task lacks.
+
+Phase structure (all inside ONE shard_map body — no host round-trips):
+
+  1. JOIN        ppermute halo exchange of neighbor partition slabs,
+                 best-match join (Pallas kernel or jnp ref), delta_t refine,
+                 vote psum over 'model'.
+  2. REGROUP     all_to_all over 'part': row-aligned partition slabs
+                 [T, Mp] -> per-home-shard full trajectories [T/P, P*Mp];
+                 compaction (valid-prefix) for windowed segmentation.
+  3. SEGMENT     TSA1 / TSA2 on full trajectories (exactly the paper's Job 1
+                 reduce); ST relation; labels scattered back via the inverse
+                 all_to_all + ppermute of the label halo.
+  4. SIMILARITY  per-partition scatter-add of join weights into the dense
+                 SP matrix, psum over 'model'; Eq. 2 normalization.
+  5. CLUSTER     Algorithm 4 per partition (thresholds resolved per
+                 partition, Sec. 6.1).
+  6. REFINE      all_gather over 'part' + the Algorithm 5 case-table
+                 reduction -> one consistent global result, replicated.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import segmentation as seg_mod
+from repro.core.clustering import cluster, resolve_thresholds
+from repro.core.geometry import filter_delta_t
+from repro.core.partitioning import PartitionedBatch
+from repro.core.refine import refine_states
+from repro.core.similarity import build_subtraj_table_arrays
+from repro.core.types import ClusteringResult, DSCParams, JoinResult, SubtrajTable
+from repro.utils.tree import pytree_dataclass
+
+
+@pytree_dataclass
+class DistributedDSCOutput:
+    result: ClusteringResult      # [S] global, replicated
+    table: SubtrajTable           # [S] global, replicated
+    vote: jnp.ndarray             # [P, T, Mp] partition layout
+    active: jnp.ndarray           # [P, S] subtraj-in-partition masks
+    sim_diag: jnp.ndarray         # [P, 3] (mean sim>0, alpha, k) per partition
+
+
+def _nbr(x, axis, shift, n):
+    """Slab from the partition at distance ``shift``; zeros at the edge."""
+    perm = [(i, i + shift) for i in range(n) if 0 <= i + shift < n]
+    return lax.ppermute(x, axis, perm)
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target``."""
+    for b in range(min(n, target), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def _pack_bits(b: jnp.ndarray) -> jnp.ndarray:
+    """[..., C] bool -> [..., ceil(C/32)] uint32."""
+    C = b.shape[-1]
+    W = -(-C // 32)
+    pad = jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, W * 32 - C)])
+    bits = pad.reshape(*b.shape[:-1], W, 32).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+
+
+def run_dsc_distributed(
+    parts: PartitionedBatch,
+    params: DSCParams,
+    mesh: Mesh,
+    *,
+    part_axis: str = "part",
+    model_axis: str = "model",
+    use_kernel: bool = False,
+    **kw,
+) -> DistributedDSCOutput:
+    """Compile & run the full distributed pipeline on ``mesh``."""
+    fn = build_dsc_program(parts, params, mesh, part_axis=part_axis,
+                           model_axis=model_axis, use_kernel=use_kernel,
+                           **kw)
+    final, table, vote, active, diag = jax.jit(fn)(
+        parts.x, parts.y, parts.t, parts.valid, parts.traj_id, parts.ranges)
+    return DistributedDSCOutput(
+        result=final, table=table, vote=vote, active=active, sim_diag=diag)
+
+
+def run_dsc_distributed_lowerable(parts: PartitionedBatch,
+                                  params: DSCParams, mesh: Mesh,
+                                  **kw):
+    """jit-friendly entry (parts as a pytree arg) for the dry-run."""
+    fn = build_dsc_program(parts, params, mesh, **kw)
+    return fn(parts.x, parts.y, parts.t, parts.valid, parts.traj_id,
+              parts.ranges)
+
+
+def build_dsc_program(
+    parts: PartitionedBatch,
+    params: DSCParams,
+    mesh: Mesh,
+    *,
+    part_axis: str = "part",
+    model_axis: str = "model",
+    use_kernel: bool = False,
+    sim_strategy: str = "psum",     # "psum" | "allgather" (column-sharded)
+    sim_dtype: str = "f32",         # "f32" | "bf16" collective payload
+):
+    """Build the shard_map program (not yet jitted) for ``parts`` shapes.
+
+    ``sim_strategy="allgather"`` exploits that each model rank's scatter
+    targets only ITS candidate-column block of the SP matrix: instead of a
+    dense [S, S] psum (2x bytes, 16x memory), each rank all_gathers its
+    [S, S/m] block — the §Perf optimization for the DSC cells.
+    ``sim_dtype="bf16"`` additionally halves the payload."""
+    nP = mesh.shape[part_axis]
+    nM = mesh.shape[model_axis]
+    Pn, T, Mp = parts.x.shape
+    assert Pn == nP, f"partitions {Pn} != mesh axis {nP}"
+    assert T % nP == 0, f"T={T} must divide partitions {nP}"
+    assert T % nM == 0, f"T={T} must divide model axis {nM}"
+    maxS = params.max_subtrajs_per_traj
+    S = T * maxS
+    Tl = T // nP           # home trajectories per shard
+    Tc = T // nM           # candidate columns per model rank
+    Mtot = nP * Mp         # full per-trajectory point capacity
+
+    def body(px, py, pt, pv, traj_id, ranges):
+        px, py, pt, pv = px[0], py[0], pt[0], pv[0]       # [T, Mp]
+        rng = ranges[0]                                   # [2]
+
+        # ---------------- phase 1: halo exchange + join ----------------
+        def halo(arr):
+            l = _nbr(arr, part_axis, +1, nP)
+            r = _nbr(arr, part_axis, -1, nP)
+            return l, r
+
+        lx, rx = halo(px)
+        ly, ry = halo(py)
+        lt, rt = halo(pt)
+        lv, rv = halo(pv)
+        eps_t = jnp.asarray(params.eps_t, jnp.float32)
+        lo, hi = rng[0] - eps_t, rng[1] + eps_t
+        lv &= (lt >= lo) & (lt <= hi)
+        rv &= (rt >= lo) & (rt <= hi)
+
+        cx = jnp.concatenate([px, lx, rx], axis=1)        # [T, 3Mp]
+        cy = jnp.concatenate([py, ly, ry], axis=1)
+        ct = jnp.concatenate([pt, lt, rt], axis=1)
+        cv = jnp.concatenate([pv, lv, rv], axis=1)
+
+        mrank = lax.axis_index(model_axis)
+        c0 = mrank * Tc
+        sl = lambda a: lax.dynamic_slice_in_dim(a, c0, Tc, axis=0)
+        cid = lax.dynamic_slice_in_dim(traj_id, c0, Tc, axis=0)
+
+        ref_ids = jnp.broadcast_to(traj_id[:, None], (T, Mp)).reshape(-1)
+        if use_kernel:
+            from repro.kernels import default_interpret
+            from repro.kernels.stjoin.stjoin import stjoin_pallas
+            bw, bidx = stjoin_pallas(
+                px.reshape(-1), py.reshape(-1), pt.reshape(-1),
+                ref_ids.astype(jnp.int32), pv.reshape(-1),
+                sl(cx), sl(cy), sl(ct), cid, sl(cv),
+                params.eps_sp, params.eps_t,
+                bp=_pick_block(T * Mp, 256), bc=_pick_block(Tc, 8),
+                bm=_pick_block(3 * Mp, 128), interpret=default_interpret())
+        else:
+            from repro.kernels.stjoin.ref import stjoin_ref
+            bw, bidx = stjoin_ref(
+                px.reshape(-1), py.reshape(-1), pt.reshape(-1),
+                ref_ids, pv.reshape(-1),
+                sl(cx), sl(cy), sl(ct), cid, sl(cv),
+                jnp.asarray(params.eps_sp, jnp.float32), eps_t)
+
+        join = JoinResult(best_w=bw.reshape(T, Mp, Tc),
+                          best_idx=bidx.reshape(T, Mp, Tc))
+        dt = jnp.asarray(params.delta_t, jnp.float32)
+        join = jax.lax.cond(
+            dt > 0.0, lambda j: filter_delta_t(j, pt, dt), lambda j: j, join)
+
+        vote = lax.psum(jnp.sum(join.best_w, axis=-1), model_axis)  # [T, Mp]
+
+        if params.segmentation == "tsa2":
+            matched = join.best_w > 0.0                    # [T, Mp, Tc]
+            allm = lax.all_gather(matched, model_axis)     # [nM, T, Mp, Tc]
+            allm = jnp.moveaxis(allm, 0, 2).reshape(T, Mp, nM * Tc)
+            masks = _pack_bits(allm)                       # [T, Mp, W]
+        else:
+            masks = jnp.zeros((T, Mp, 1), jnp.uint32)
+
+        # ---------------- phase 2: regroup by trajectory ----------------
+        def regroup(a):      # [T, Mp, ...] -> [Tl, nP * Mp, ...]
+            a = a.reshape(nP, Tl, *a.shape[1:])
+            a = lax.all_to_all(a, part_axis, split_axis=0, concat_axis=1)
+            # [Tl, nP, Mp, ...] -> [Tl, nP*Mp, ...]
+            return a.reshape(Tl, nP * Mp, *a.shape[3:])
+
+        g_vote = regroup(vote)
+        g_t = regroup(pt)
+        g_v = regroup(pv)
+        g_masks = regroup(masks) if params.segmentation == "tsa2" else None
+
+        # compact: valid points first (windows need a contiguous prefix)
+        key = jnp.where(g_v, 0, 1) * (Mtot + 1) + jnp.arange(Mtot)[None, :]
+        order = jnp.argsort(key, axis=1)
+        inv_order = jnp.argsort(order, axis=1)
+        takev = lambda a: jnp.take_along_axis(a, order, axis=1)
+        c_vote, c_t, c_v = takev(g_vote), takev(g_t), takev(g_v)
+
+        # ---------------- phase 3: segmentation (Job 1 reduce) ----------
+        if params.segmentation == "tsa1":
+            vmax = jnp.max(jnp.where(c_v, c_vote, 0.0), axis=1, keepdims=True)
+            nvote = jnp.where(c_v, c_vote / jnp.maximum(vmax, 1e-12), 0.0)
+            seg = seg_mod.tsa1(nvote, c_v, params.w, params.tau, maxS)
+        else:
+            c_masks = jnp.take_along_axis(
+                g_masks, order[..., None], axis=1)
+            seg = seg_mod.tsa2(c_masks, c_v, params.w, params.tau, maxS)
+
+        table_l = build_subtraj_table_arrays(
+            c_t, c_v, seg.sub_local, c_vote, maxS)         # S_l = Tl*maxS
+
+        def gather_table(x):
+            g = lax.all_gather(x, part_axis)               # [nP, S_l]
+            return g.reshape(S, *x.shape[1:])
+
+        table = SubtrajTable(
+            t_start=gather_table(table_l.t_start),
+            t_end=gather_table(table_l.t_end),
+            voting=gather_table(table_l.voting),
+            card=gather_table(table_l.card),
+            valid=gather_table(table_l.valid),
+            traj_row=jnp.repeat(jnp.arange(T, dtype=jnp.int32), maxS))
+
+        # labels back to partition layout
+        sub_padded = jnp.take_along_axis(seg.sub_local, inv_order, axis=1)
+        sub_padded = sub_padded.reshape(Tl, nP, Mp)
+        labels = lax.all_to_all(
+            sub_padded, part_axis, split_axis=1, concat_axis=0)
+        labels = labels.reshape(T, Mp)                     # [T, Mp] sub_local
+
+        gid_own = jnp.where(
+            (labels >= 0) & pv,
+            jnp.arange(T, dtype=jnp.int32)[:, None] * maxS + labels, S)
+
+        # candidate labels: same halo structure as the points
+        ll, rl = halo(jnp.where(labels >= 0, labels, -1))
+        lab_cat = jnp.concatenate(
+            [jnp.where(labels >= 0, labels, -1), ll, rl], axis=1)  # [T, 3Mp]
+        gid_cat = jnp.where(
+            (lab_cat >= 0) & cv,
+            jnp.arange(T, dtype=jnp.int32)[:, None] * maxS + lab_cat, S)
+
+        # ---------------- phase 4: similarity (SP relation) -------------
+        gid_cand = sl(gid_cat)                             # [Tc, 3Mp]
+        idx = jnp.clip(join.best_idx, 0, 3 * Mp - 1)
+        dst = jnp.where(
+            join.best_idx >= 0,
+            gid_cand[jnp.arange(Tc)[None, None, :], idx], S)  # [T, Mp, Tc]
+        src = jnp.broadcast_to(gid_own[:, :, None], (T, Mp, Tc))
+
+        if sim_strategy == "allgather":
+            S_loc = Tc * maxS
+            c0s = c0 * maxS
+            dst_l = jnp.where(dst < S, dst - c0s, S_loc)
+            raw = jnp.zeros((S + 1, S_loc + 1), jnp.float32)
+            raw = raw.at[src.reshape(-1), dst_l.reshape(-1)].add(
+                join.best_w.reshape(-1))
+            raw = raw[:S, :S_loc]
+            if sim_dtype == "bf16":
+                raw = raw.astype(jnp.bfloat16)
+            gathered = lax.all_gather(raw, model_axis)     # [nM, S, S_loc]
+            raw = jnp.moveaxis(gathered, 0, 1).reshape(S, S)
+            raw = raw.astype(jnp.float32)
+        else:
+            raw = jnp.zeros((S + 1, S + 1), jnp.float32)
+            raw = raw.at[src.reshape(-1), dst.reshape(-1)].add(
+                join.best_w.reshape(-1))
+            if sim_dtype == "bf16":
+                raw = raw.astype(jnp.bfloat16)
+            raw = lax.psum(raw[:S, :S], model_axis).astype(jnp.float32)
+
+        denom = jnp.minimum(table.card[:, None], table.card[None, :])
+        sim = raw / jnp.maximum(denom, 1).astype(jnp.float32)
+        sim = jnp.maximum(sim, sim.T)
+        sim = sim * (1.0 - jnp.eye(S, dtype=sim.dtype))
+
+        # subtrajectories active in THIS partition
+        active = jnp.zeros((S + 1,), bool).at[gid_own.reshape(-1)].set(
+            True, mode="drop")[:S]
+        part_table = table.replace(valid=table.valid & active)
+        sim = jnp.where(active[:, None] & active[None, :], sim, 0.0)
+
+        # ---------------- phase 5: per-partition clustering -------------
+        res_l = cluster(sim, part_table, params)
+        alpha, k = res_l.alpha_used, res_l.k_used
+
+        # ---------------- phase 6: cross-partition refinement -----------
+        g_member = lax.all_gather(res_l.member_of, part_axis)    # [nP, S]
+        g_sim = lax.all_gather(res_l.member_sim, part_axis)
+        g_rep = lax.all_gather(res_l.is_rep, part_axis)
+        g_active = lax.all_gather(active, part_axis)
+        final = refine_states(
+            g_member, g_sim, g_rep, g_active,
+            lax.pmean(alpha, part_axis), lax.pmean(k, part_axis))
+
+        pos = sim > 0
+        meansim = jnp.sum(jnp.where(pos, sim, 0.0)) / jnp.maximum(
+            jnp.sum(pos), 1)
+        diag = jnp.stack([meansim, alpha, k])
+        return final, table, vote[None], active[None], diag[None]
+
+    part_spec = P(part_axis, None, None)
+    in_specs = (part_spec, part_spec, part_spec, part_spec,
+                P(), P(part_axis, None))
+    out_specs = (P(), P(), P(part_axis, None, None),
+                 P(part_axis, None), P(part_axis, None))
+
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False)

@@ -1,0 +1,92 @@
+"""Single-host end-to-end DSC pipeline (Algorithm 1, P = 1).
+
+This is the semantic reference: the distributed pipeline
+(``repro.core.distributed``) must produce the same clusters on the same data
+(tested).  The stages mirror the paper exactly:
+
+    subtrajectory join (Problem 1)  ->  voting  ->  segmentation (Problem 2)
+    ->  ST / SP relations  ->  clustering + outliers (Problem 3)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import geometry, segmentation, similarity, voting
+from repro.core.clustering import cluster, rmse, sscr
+from repro.core.types import (ClusteringResult, DSCParams, JoinResult,
+                              SubtrajSegmentation, SubtrajTable,
+                              TrajectoryBatch)
+from repro.utils.tree import pytree_dataclass
+
+
+@pytree_dataclass
+class DSCOutput:
+    join: JoinResult
+    vote: jnp.ndarray               # [T, M] point voting
+    seg: SubtrajSegmentation
+    table: SubtrajTable
+    sim: jnp.ndarray                # [S, S]
+    result: ClusteringResult
+    sscr: jnp.ndarray               # Eq. 3 objective
+    rmse: jnp.ndarray               # Sec. 6.2 quality metric
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def run_dsc(batch: TrajectoryBatch, params: DSCParams,
+            use_kernel: bool = False) -> DSCOutput:
+    """Run the full DSC pipeline on one host / one partition."""
+    if use_kernel:
+        from repro.kernels.stjoin import ops as stjoin_ops
+        join = stjoin_ops.subtrajectory_join(
+            batch, batch, params.eps_sp, params.eps_t, params.delta_t)
+    else:
+        join = geometry.subtrajectory_join(
+            batch, batch, params.eps_sp, params.eps_t, params.delta_t)
+
+    vote = voting.point_voting(join)
+    nvote = voting.normalized_voting(vote, batch.valid)
+
+    if params.segmentation == "tsa1":
+        seg = segmentation.tsa1(nvote, batch.valid, params.w, params.tau,
+                                params.max_subtrajs_per_traj)
+    else:
+        masks = voting.neighbor_mask_packed(join)
+        seg = segmentation.tsa2(masks, batch.valid, params.w, params.tau,
+                                params.max_subtrajs_per_traj)
+
+    table = similarity.build_subtraj_table(
+        batch, seg, vote, params.max_subtrajs_per_traj)
+    sim = similarity.similarity_matrix(
+        join, seg, seg.sub_local, table, params.max_subtrajs_per_traj)
+
+    result = cluster(sim, table, params)
+    return DSCOutput(join=join, vote=vote, seg=seg, table=table, sim=sim,
+                     result=result, sscr=sscr(result, sim),
+                     rmse=rmse(result, sim, params.eps_sp))
+
+
+def cluster_summary(out: DSCOutput) -> dict:
+    """Host-side summary: cluster -> member subtraj slots; outliers list."""
+    import numpy as np
+    member_of = np.asarray(out.result.member_of)
+    is_rep = np.asarray(out.result.is_rep)
+    is_out = np.asarray(out.result.is_outlier)
+    valid = np.asarray(out.table.valid)
+    clusters: dict[int, list[int]] = {}
+    for s in np.nonzero(valid)[0]:
+        if is_rep[s]:
+            clusters.setdefault(int(s), []).append(int(s))
+        elif member_of[s] >= 0:
+            clusters.setdefault(int(member_of[s]), []).append(int(s))
+    return {
+        "clusters": clusters,
+        "outliers": [int(s) for s in np.nonzero(valid & is_out)[0]],
+        "num_clusters": len(clusters),
+        "sscr": float(out.sscr),
+        "rmse": float(out.rmse),
+        "alpha": float(out.result.alpha_used),
+        "k": float(out.result.k_used),
+    }

@@ -1,0 +1,97 @@
+"""Temporal equi-depth partitioning (the paper's Repartitioning phase).
+
+Host-side preprocessing, done once per dataset (paper Sec. 4.2): build an
+equi-depth histogram over the temporal dimension (every bin holds ~the same
+number of points — the Hadoop InputSampler/TotalOrderPartitioner analogue),
+then lay the points out *row-aligned*: partition p holds, for every global
+trajectory row r, the points of r falling in p's time range, padded to
+``Mp``.  Row alignment is what turns the MapReduce group-by-trajectory
+shuffle into a single static ``all_to_all`` (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import TrajectoryBatch
+from repro.utils.tree import pytree_dataclass
+
+import jax.numpy as jnp
+
+
+@pytree_dataclass
+class PartitionedBatch:
+    """Row-aligned temporal partitions: ``[P, T, Mp]`` point slabs."""
+
+    x: jnp.ndarray       # [P, T, Mp] float32
+    y: jnp.ndarray       # [P, T, Mp]
+    t: jnp.ndarray       # [P, T, Mp]
+    valid: jnp.ndarray   # [P, T, Mp] bool
+    traj_id: jnp.ndarray  # [T] int32 global ids (-1 padding rows)
+    ranges: jnp.ndarray  # [P, 2] float32 (t_lo, t_hi) per partition
+
+    @property
+    def num_partitions(self) -> int:
+        return self.x.shape[0]
+
+
+def equi_depth_edges(times: np.ndarray, P: int,
+                     sample: int | None = 100_000,
+                     seed: int = 0) -> np.ndarray:
+    """Equi-depth bin edges from a sample of the valid timestamps."""
+    times = np.asarray(times).ravel()
+    if sample is not None and times.size > sample:
+        rng = np.random.default_rng(seed)
+        times = rng.choice(times, size=sample, replace=False)
+    qs = np.quantile(times, np.linspace(0.0, 1.0, P + 1))
+    qs[0], qs[-1] = -np.inf, np.inf
+    # guard against duplicate edges on highly skewed data
+    for i in range(1, P):
+        if qs[i] <= qs[i - 1]:
+            qs[i] = np.nextafter(qs[i - 1], np.inf)
+    return qs.astype(np.float64)
+
+
+def partition_batch(batch: TrajectoryBatch, P: int, *, pad_mp_to: int = 8,
+                    sample: int | None = 100_000) -> PartitionedBatch:
+    """Split a TrajectoryBatch into P row-aligned temporal partitions."""
+    x = np.asarray(batch.x)
+    y = np.asarray(batch.y)
+    t = np.asarray(batch.t)
+    v = np.asarray(batch.valid)
+    T, M = x.shape
+
+    edges = equi_depth_edges(t[v], P, sample=sample)
+    # partition index per point
+    pidx = np.searchsorted(edges, t, side="right") - 1
+    pidx = np.clip(pidx, 0, P - 1)
+    pidx = np.where(v, pidx, -1)
+
+    counts = np.zeros((P, T), np.int64)
+    for p in range(P):
+        counts[p] = (pidx == p).sum(axis=1)
+    Mp = int(counts.max(initial=1))
+    Mp = max(pad_mp_to, ((Mp + pad_mp_to - 1) // pad_mp_to) * pad_mp_to)
+
+    px = np.zeros((P, T, Mp), np.float32)
+    py = np.zeros((P, T, Mp), np.float32)
+    pt = np.zeros((P, T, Mp), np.float32)
+    pv = np.zeros((P, T, Mp), bool)
+    for p in range(P):
+        for r in range(T):
+            sel = np.nonzero(pidx[r] == p)[0]
+            m = len(sel)
+            if m:
+                px[p, r, :m] = x[r, sel]
+                py[p, r, :m] = y[r, sel]
+                pt[p, r, :m] = t[r, sel]
+                pv[p, r, :m] = True
+
+    finite_lo = np.where(np.isfinite(edges[:-1]), edges[:-1],
+                         t[v].min() - 1.0)
+    finite_hi = np.where(np.isfinite(edges[1:]), edges[1:], t[v].max() + 1.0)
+    ranges = np.stack([finite_lo, finite_hi], axis=1).astype(np.float32)
+
+    return PartitionedBatch(
+        x=jnp.asarray(px), y=jnp.asarray(py), t=jnp.asarray(pt),
+        valid=jnp.asarray(pv), traj_id=batch.traj_id,
+        ranges=jnp.asarray(ranges))

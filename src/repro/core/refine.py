@@ -1,0 +1,58 @@
+"""Cross-partition refinement (Algorithm 5).
+
+A subtrajectory replicated in several temporal partitions may receive
+contradicting states (Repr / Cluster-member / Outlier).  The paper's case
+table (a)-(f) reduces, for every replicated subtrajectory, to a single rule:
+
+    Repr anywhere                      -> Repr          (cases b, d, e)
+    else member anywhere               -> member of the cluster with the
+                                          max similarity  (cases c, f)
+    else                               -> outlier       (case a, dedup)
+
+``refine_states`` implements that reduction over a ``[P, S]`` stack of
+per-partition states; the distributed pipeline feeds it p/p+1 neighbor pairs
+via ppermute, the single-host path feeds the full stack.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.types import ClusteringResult
+
+
+def refine_states(member_of: jnp.ndarray, member_sim: jnp.ndarray,
+                  is_rep: jnp.ndarray, valid: jnp.ndarray,
+                  alpha: jnp.ndarray, k: jnp.ndarray) -> ClusteringResult:
+    """Reduce per-partition states [P, S] to a consistent global state [S].
+
+    ``member_of`` holds *global* representative slot ids (or -1); replicated
+    rows agree on slot numbering because subtrajectory slots are globally
+    aligned across partitions.
+    """
+    P, S = member_of.shape
+    any_rep = jnp.any(is_rep & valid, axis=0)                     # [S]
+
+    sim_masked = jnp.where(valid & (member_of >= 0) & ~is_rep,
+                           member_sim, -jnp.inf)                  # [P, S]
+    best_p = jnp.argmax(sim_masked, axis=0)                       # [S]
+    best_sim = jnp.take_along_axis(sim_masked, best_p[None, :], axis=0)[0]
+    best_of = jnp.take_along_axis(member_of, best_p[None, :], axis=0)[0]
+    has_member = jnp.isfinite(best_sim) & (best_sim > -jnp.inf)
+
+    slot = jnp.arange(S, dtype=jnp.int32)
+    member_of_out = jnp.where(
+        any_rep, slot, jnp.where(has_member, best_of, -1)).astype(jnp.int32)
+    member_sim_out = jnp.where(
+        any_rep, jnp.inf, jnp.where(has_member, best_sim, 0.0))
+    seen = jnp.any(valid, axis=0)
+    is_outlier = seen & ~any_rep & ~has_member
+
+    # a member whose representative was demoted elsewhere cannot occur:
+    # representatives are never demoted by the case table (rule "Repr anywhere
+    # -> Repr"), so member pointers stay consistent.
+    return ClusteringResult(
+        member_of=jnp.where(seen, member_of_out, -1),
+        member_sim=jnp.where(seen, member_sim_out, 0.0),
+        is_rep=any_rep & seen,
+        is_outlier=is_outlier,
+        alpha_used=alpha, k_used=k)

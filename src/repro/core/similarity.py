@@ -1,0 +1,92 @@
+"""Subtrajectory similarity (Eq. 2) and the ST / SP relations.
+
+After segmentation, every join match ``(ref point (r, m)  <->  best point of
+candidate trajectory c)`` contributes its weight ``1 - d_s/eps_sp`` to the
+(sub(r, m), sub(c, best_idx)) cell of the similarity matrix — the densified SP
+relation.  The normalizer is ``min(|r'|, |s'|)`` (Eq. 2's denominator).
+
+The matrix is symmetrized with ``max`` (DESIGN.md §2.4): the paper's LCSS
+similarity is symmetric by definition; the dense best-match estimate can differ
+slightly between the two viewpoints.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.types import (JoinResult, SubtrajSegmentation, SubtrajTable,
+                              TrajectoryBatch)
+
+
+def build_subtraj_table(batch: TrajectoryBatch, seg: SubtrajSegmentation,
+                        vote: jnp.ndarray, max_subs: int) -> SubtrajTable:
+    """The ST relation: (t_start, t_end, V, Card) per (traj, local sub) slot."""
+    return build_subtraj_table_arrays(
+        batch.t, batch.valid, seg.sub_local, vote, max_subs)
+
+
+def build_subtraj_table_arrays(t: jnp.ndarray, valid: jnp.ndarray,
+                               sub_local: jnp.ndarray, vote: jnp.ndarray,
+                               max_subs: int) -> SubtrajTable:
+    """Array-level ST construction (used by the distributed pipeline)."""
+    T, M = t.shape
+    S = T * max_subs
+    slot = jnp.where(
+        sub_local >= 0,
+        jnp.arange(T)[:, None] * max_subs + sub_local, S)        # [T, M]
+    flat = slot.reshape(-1)
+    big = jnp.float32(3.4e38)
+
+    t_start = jnp.full((S + 1,), big).at[flat].min(
+        jnp.where(valid, t, big).reshape(-1))[:S]
+    t_end = jnp.full((S + 1,), -big).at[flat].max(
+        jnp.where(valid, t, -big).reshape(-1))[:S]
+    card = jnp.zeros((S + 1,), jnp.int32).at[flat].add(
+        valid.reshape(-1).astype(jnp.int32))[:S]
+    vsum = jnp.zeros((S + 1,), jnp.float32).at[flat].add(
+        jnp.where(valid, vote, 0.0).reshape(-1))[:S]
+
+    valid = card > 0
+    voting = jnp.where(valid, vsum / jnp.maximum(card, 1), 0.0)
+    traj_row = jnp.repeat(jnp.arange(T, dtype=jnp.int32), max_subs)
+    return SubtrajTable(
+        t_start=jnp.where(valid, t_start, 0.0),
+        t_end=jnp.where(valid, t_end, 0.0),
+        voting=voting, card=card, valid=valid, traj_row=traj_row)
+
+
+def similarity_matrix(
+    join: JoinResult,
+    ref_seg: SubtrajSegmentation,
+    cand_seg_sub_local: jnp.ndarray,   # [C, Mc] candidate-side point->sub map
+    table: SubtrajTable,
+    max_subs: int,
+) -> jnp.ndarray:
+    """Densified SP relation: Sim[S, S] per Eq. 2, symmetrized.
+
+    ``cand_seg_sub_local`` maps each candidate point to its local subtraj id
+    (in a self-join this is the same array as ``ref_seg.sub_local``).
+    """
+    T, M, C = join.best_w.shape
+    S = table.num_slots
+
+    src = jnp.where(
+        ref_seg.sub_local >= 0,
+        jnp.arange(T)[:, None] * max_subs + ref_seg.sub_local, S)  # [T, M]
+    src = jnp.broadcast_to(src[:, :, None], (T, M, C))
+
+    idx = jnp.clip(join.best_idx, 0, cand_seg_sub_local.shape[1] - 1)
+    cand_sub = cand_seg_sub_local[
+        jnp.arange(C)[None, None, :], idx]                          # [T, M, C]
+    dst = jnp.where(
+        (join.best_idx >= 0) & (cand_sub >= 0),
+        jnp.arange(C)[None, None, :] * max_subs + cand_sub, S)
+
+    raw = jnp.zeros((S + 1, S + 1), jnp.float32)
+    raw = raw.at[src.reshape(-1), dst.reshape(-1)].add(join.best_w.reshape(-1))
+    raw = raw[:S, :S]
+
+    denom = jnp.minimum(table.card[:, None], table.card[None, :])
+    sim = raw / jnp.maximum(denom, 1).astype(jnp.float32)
+    sim = jnp.maximum(sim, sim.T)
+    sim = jnp.where(table.valid[:, None] & table.valid[None, :], sim, 0.0)
+    return sim * (1.0 - jnp.eye(S, dtype=sim.dtype))

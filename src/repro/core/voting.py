@@ -1,0 +1,45 @@
+"""Voting (Eqs. 4, 5, 6) — the density measure driving TSA1 and clustering.
+
+Deviation from the paper (documented in DESIGN.md §2.1): Eq. 4 as printed sums
+``d_s/eps_sp``, which *grows* with distance; we use the proximity weight
+``1 - d_s/eps_sp`` (consistent with Eq. 2), so a coincident neighbor votes 1
+and a neighbor at the eps_sp boundary votes 0.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.types import JoinResult
+
+
+def point_voting(join: JoinResult) -> jnp.ndarray:
+    """``V(r_i)`` per point: sum of best-match weights over candidate trajs."""
+    return jnp.sum(join.best_w, axis=-1)                     # [T, M] float32
+
+
+def normalized_voting(vote: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 5: per-trajectory max-normalized voting vector (0 on padding)."""
+    vote = jnp.where(valid, vote, 0.0)
+    vmax = jnp.max(vote, axis=1, keepdims=True)
+    return jnp.where(valid, vote / jnp.maximum(vmax, 1e-12), 0.0)
+
+
+def trajectory_voting(vote: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 6: mean voting of a trajectory's valid points."""
+    n = jnp.maximum(jnp.sum(valid, axis=1), 1)
+    return jnp.sum(jnp.where(valid, vote, 0.0), axis=1) / n
+
+
+def neighbor_mask_packed(join: JoinResult) -> jnp.ndarray:
+    """TSA2 input: per-point neighbor *sets* as bit-packed uint32 words.
+
+    Bit ``c`` of word ``c // 32`` is set iff candidate trajectory ``c`` has a
+    (delta_t-surviving) match with this point.  Shape: ``[T, M, ceil(C/32)]``.
+    """
+    T, M, C = join.best_w.shape
+    W = -(-C // 32)
+    matched = join.best_w > 0.0
+    pad = jnp.pad(matched, ((0, 0), (0, 0), (0, W * 32 - C)))
+    bits = pad.reshape(T, M, W, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)   # [T, M, W]

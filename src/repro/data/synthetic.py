@@ -1,0 +1,180 @@
+"""Synthetic trajectory generators.
+
+``figure1_scenario``  — the paper's running example (Sec. 1 / Sec. 6.2):
+six origin-destination routes A->B, A->C, A->D, B->A, B->C, B->D through a
+common midpoint O, same start time, similar speed.  Ground truth at
+subtrajectory level: clusters A->O, B->O, O->C, O->D and, depending on
+``outliers_as_clusters``, either 2 outliers (O->A, O->B; Fig. 1) or 6 clusters
+(Sec. 6.2's variant where every leg is supported by ``n_per_route`` objects).
+
+``ais_like``          — Brest-area-style maritime traffic: vessels follow a
+small set of lanes (great-circle-ish line segments between waypoint pairs)
+with per-vessel speed/offset jitter, variable sampling rate and temporal
+displacement — the properties the paper's similarity is designed for.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import TrajectoryBatch
+
+# Geometry of the example: A, B on the left, C, D on the right, O in middle.
+_POINTS = {
+    "A": np.array([0.0, 1.0]),
+    "B": np.array([0.0, -1.0]),
+    "C": np.array([2.0, 1.0]),
+    "D": np.array([2.0, -1.0]),
+    "O": np.array([1.0, 0.0]),
+}
+_ROUTES = [("A", "B"), ("A", "C"), ("A", "D"), ("B", "A"), ("B", "C"),
+           ("B", "D")]
+ROUTE_ENDPOINTS = list(_ROUTES)
+
+
+def route_origins_dests(labels):
+    """Per-trajectory (origin, destination) names for figure-1 labels."""
+    import numpy as np
+    origins = np.asarray([ROUTE_ENDPOINTS[r][0] for r in labels])
+    dests = np.asarray([ROUTE_ENDPOINTS[r][1] for r in labels])
+    return origins, dests
+
+
+def _leg(p0, p1, n, t0, dt, rng, jitter):
+    ts = np.linspace(0.0, 1.0, n, endpoint=False)
+    pts = p0[None, :] + ts[:, None] * (p1 - p0)[None, :]
+    pts = pts + rng.normal(0.0, jitter, pts.shape)
+    t = t0 + np.arange(n) * dt
+    return np.concatenate([pts, t[:, None]], axis=1)
+
+
+def figure1_scenario(n_per_route: int = 5, points_per_leg: int = 32,
+                     jitter: float = 0.01, dt: float = 1.0,
+                     time_jitter: float = 0.2, seed: int = 0,
+                     pad_trajs_to: int | None = None) -> tuple[
+                         TrajectoryBatch, np.ndarray]:
+    """Returns (batch, route_label[T]) — route label indexes ``_ROUTES``."""
+    rng = np.random.default_rng(seed)
+    trajs, labels = [], []
+    for ridx, (a, b) in enumerate(_ROUTES):
+        for _ in range(n_per_route):
+            t0 = rng.uniform(0.0, time_jitter * dt)
+            leg1 = _leg(_POINTS[a], _POINTS["O"], points_per_leg, t0, dt,
+                        rng, jitter)
+            leg2 = _leg(_POINTS["O"], _POINTS[b], points_per_leg,
+                        t0 + points_per_leg * dt, dt, rng, jitter)
+            trajs.append(np.concatenate([leg1, leg2], axis=0))
+            labels.append(ridx)
+    batch = TrajectoryBatch.from_numpy(
+        trajs, max_points=2 * points_per_leg, pad_trajs_to=pad_trajs_to)
+    return batch, np.asarray(labels)
+
+
+def crossing_scenario(n_per_route: int = 3, points_per_leg: int = 16,
+                      n_crossers: int = 4, n_fringe: int = 3,
+                      fringe_offset: float = 0.32, seed: int = 2):
+    """Figure-1 traffic plus two kinds of weak associates of the A->O
+    corridor (the paper's Fig. 7 mechanisms):
+
+    * crossers — share the corridor only *briefly* then veer off: rejected by
+      DSC's delta_t minimum-match-duration, attachable without it;
+    * fringe riders — parallel to the corridor at ~0.75 * eps_sp offset: their
+      weighted-LCSS similarity (~0.25) falls below DSC's alpha floor but is
+      positive, so floor-less methods (S2T) attach them, inflating RMSE.
+    """
+    rng = np.random.default_rng(seed)
+    batch, labels = figure1_scenario(
+        n_per_route=n_per_route, points_per_leg=points_per_leg, seed=seed)
+    trajs = []
+    T, M = batch.x.shape
+    x = np.asarray(batch.x)
+    y = np.asarray(batch.y)
+    t = np.asarray(batch.t)
+    v = np.asarray(batch.valid)
+    base = [np.stack([x[r][v[r]], y[r][v[r]], t[r][v[r]]], 1)
+            for r in range(T)]
+    mid = 0.5 * (_POINTS["A"] + _POINTS["O"])
+    direction = (_POINTS["O"] - _POINTS["A"])
+    direction = direction / np.linalg.norm(direction)
+    normal = np.array([-direction[1], direction[0]])
+    touch = max(3, points_per_leg // 4)
+    for c in range(n_crossers):
+        t0 = 0.3 * points_per_leg + rng.uniform(0, 2.0)
+        n = points_per_leg
+        pts = np.zeros((n, 3))
+        for i in range(n):
+            if i < touch:     # brief ride along the corridor
+                pos = mid + direction * (i * 0.06) + rng.normal(0, 0.01, 2)
+            else:             # veer off perpendicular, far away
+                pos = (mid + direction * (touch * 0.06)
+                       + normal * ((i - touch) * 0.25)
+                       + rng.normal(0, 0.01, 2))
+            pts[i] = [pos[0], pos[1], t0 + i]
+        trajs.append(pts)
+    for f in range(n_fringe):
+        t0 = rng.uniform(0, 1.0)
+        n = points_per_leg
+        off = fringe_offset * (1.0 + 0.1 * rng.standard_normal())
+        pts = np.zeros((n, 3))
+        seg = (_POINTS["O"] - _POINTS["A"])
+        for i in range(n):
+            pos = (_POINTS["A"] + seg * (i / n) + normal * off
+                   + rng.normal(0, 0.005, 2))
+            pts[i] = [pos[0], pos[1], t0 + i]
+        trajs.append(pts)
+    all_trajs = base + trajs
+    out = TrajectoryBatch.from_numpy(all_trajs,
+                                     max_points=2 * points_per_leg)
+    n_extra = n_crossers + n_fringe
+    extra = np.concatenate([np.zeros(T, bool), np.ones(n_extra, bool)])
+    return out, np.concatenate([labels, -np.ones(n_extra, int)]), extra
+
+
+def ais_like(n_vessels: int = 64, n_lanes: int = 4, max_points: int = 128,
+             area: float = 100.0, mean_speed: float = 0.4,
+             sample_dt: float = 60.0, dt_jitter: float = 0.3,
+             lane_width: float = 0.5, seed: int = 0,
+             duration: float | None = None,
+             pad_trajs_to: int | None = None) -> tuple[
+                 TrajectoryBatch, np.ndarray]:
+    """Lane-following maritime-style traffic; returns (batch, lane_label)."""
+    rng = np.random.default_rng(seed)
+    # lanes: pairs of endpoints in the [0, area]^2 box
+    lanes = rng.uniform(0.1 * area, 0.9 * area, (n_lanes, 2, 2))
+    trajs, labels = [], []
+    for v in range(n_vessels):
+        lane = int(rng.integers(n_lanes))
+        p0, p1 = lanes[lane]
+        direction = (p1 - p0) / (np.linalg.norm(p1 - p0) + 1e-9)
+        offset = rng.normal(0.0, lane_width, 2)
+        speed = mean_speed * rng.uniform(0.7, 1.3)
+        n = int(rng.integers(max_points // 2, max_points + 1))
+        t0 = rng.uniform(0.0, 0.25 * (duration or n * sample_dt))
+        dts = sample_dt * rng.uniform(1.0 - dt_jitter, 1.0 + dt_jitter, n)
+        t = t0 + np.cumsum(dts)
+        s = speed * (t - t[0])
+        s = np.minimum(s, np.linalg.norm(p1 - p0))
+        pts = p0[None, :] + offset[None, :] + s[:, None] * direction[None, :]
+        pts = pts + rng.normal(0.0, 0.05 * lane_width, pts.shape)
+        trajs.append(np.concatenate([pts, t[:, None]], axis=1))
+        labels.append(lane)
+    batch = TrajectoryBatch.from_numpy(
+        trajs, max_points=max_points, pad_trajs_to=pad_trajs_to)
+    return batch, np.asarray(labels)
+
+
+def default_dsc_params_for(batch: TrajectoryBatch):
+    """Paper Sec. 6.1 heuristics: eps_sp ~ %% of diameter, eps_t/delta_t ~
+    multiples of the mean sampling interval."""
+    import numpy as np
+    x = np.asarray(batch.x)[np.asarray(batch.valid)]
+    y = np.asarray(batch.y)[np.asarray(batch.valid)]
+    t = np.asarray(batch.t)
+    v = np.asarray(batch.valid)
+    diam = float(np.hypot(x.max() - x.min(), y.max() - y.min()))
+    dts = []
+    for r in range(t.shape[0]):
+        tr = t[r][v[r]]
+        if len(tr) > 1:
+            dts.append(np.diff(tr).mean())
+    mean_dt = float(np.mean(dts)) if dts else 1.0
+    return diam, mean_dt

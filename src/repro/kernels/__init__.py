@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the DSC hot spots.
+
+Each kernel package ships three modules:
+  <name>.py — the pl.pallas_call kernel with explicit BlockSpec VMEM tiling
+  ops.py    — the jit'd public wrapper (interpret=True on CPU)
+  ref.py    — the pure-jnp oracle used by tests/benchmarks
+
+Kernels:
+  stjoin    — best-match spatiotemporal join (the paper's dominant cost)
+  lcss      — weighted-LCSS dynamic program (Eq. 2), anti-diagonal wavefront
+  jaccard   — TSA2 sliding-window set-union Jaccard over bit-packed masks
+  attention — flash attention for the LM serving path (optional)
+"""
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Interpret kernels in Python unless we are actually on TPU."""
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,26 @@
+"""Public wrapper for the flash attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.attention.flash import flash_attention_fwd
+
+HUGE = 1 << 30
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "interpret"))
+def flash_attention(q, k, v, q_positions, kv_positions, *, window=None,
+                    prefix=None, max_kv=None, softcap=None,
+                    interpret=None):
+    if interpret is None:
+        interpret = default_interpret()
+    window = HUGE if window is None else window
+    prefix = 0 if prefix is None else prefix
+    max_kv = HUGE if max_kv is None else max_kv
+    return flash_attention_fwd(
+        q, k, v, q_positions, kv_positions, window, prefix, max_kv,
+        softcap=softcap, interpret=interpret)

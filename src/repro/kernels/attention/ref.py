@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, q_positions, kv_positions, window, prefix,
+                        max_kv, softcap=None):
+    """q: [B, Lq, KV, G, hd]; k/v: [B, M, KV, hd] -> [B, Lq, KV, G, hd]."""
+    s = jnp.einsum("blkgh,bmkh->blkgm", q, k).astype(jnp.float32)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qp, kp = q_positions, kv_positions
+    causal = kp[None, :] <= qp[:, None]
+    causal &= kp[None, :] > (qp[:, None] - window)
+    bidir = (kp[None, :] < prefix) & (qp[:, None] < prefix)
+    ok = (causal | bidir) & (kp[None, :] <= max_kv)
+    s = jnp.where(ok[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("blkgm,bmkh->blkgh", p.astype(q.dtype), v)

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: TSA2's sliding-window set-union Jaccard dissimilarity.
+
+Input: per-point neighbor sets, bit-packed as uint32 words ``[T, M, W]``
+(bit c of word c//32 set iff candidate trajectory c matches the point).
+For every position n the kernel forms the unions
+
+    l1 = OR of masks[n-w .. n-1]        l2 = OR of masks[n .. n+w-1]
+
+and emits ``d[n] = 1 - popcount(l1 & l2) / popcount(l1 | l2)`` (Algorithm 3
+line 7).  The window OR is an unrolled sequence of ``w`` static shifts along
+the point axis — pure integer VPU work (no MXU), ``O(M * w * W)`` ops per
+trajectory; bit-packing gives a 32x reduction in both bytes and ops versus
+the boolean-expanded reference.
+
+Block layout: a [bt, M, W] slab per program instance (bt=8, M<=512, W<=32 ->
+512 KiB) — the whole trajectory must be resident because windows straddle
+tile borders.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(masks_ref, out_d_ref, *, w: int):
+    masks = masks_ref[...]                         # [bt, M, W] uint32
+    bt, M, W = masks.shape
+
+    def shifted(k):
+        """masks shifted so position n reads masks[n - k] (zeros off-edge)."""
+        if k == 0:
+            return masks
+        if k > 0:
+            pad = jnp.zeros((bt, k, W), masks.dtype)
+            return jnp.concatenate([pad, masks[:, :M - k]], axis=1)
+        pad = jnp.zeros((bt, -k, W), masks.dtype)
+        return jnp.concatenate([masks[:, -k:], pad], axis=1)
+
+    l1 = jnp.zeros_like(masks)
+    for k in range(1, w + 1):                      # W1 = [n-w, n-1]
+        l1 = l1 | shifted(k)
+    l2 = jnp.zeros_like(masks)
+    for k in range(0, w):                          # W2 = [n, n+w-1]
+        l2 = l2 | shifted(-k)
+
+    inter = jnp.sum(jax.lax.population_count(l1 & l2), axis=-1)
+    union = jnp.sum(jax.lax.population_count(l1 | l2), axis=-1)
+    inter = inter.astype(jnp.float32)
+    union = union.astype(jnp.float32)
+    out_d_ref[...] = jnp.where(
+        union > 0, 1.0 - inter / jnp.maximum(union, 1.0), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("w", "bt", "interpret"))
+def jaccard_pallas(masks: jnp.ndarray, *, w: int, bt: int = 8,
+                   interpret: bool = True) -> jnp.ndarray:
+    """[T, M, W] packed masks -> [T, M] window Jaccard dissimilarity."""
+    T, M, W = masks.shape
+    padT = (-T) % bt
+    if padT:
+        masks = jnp.pad(masks, ((0, padT), (0, 0), (0, 0)))
+    Tp = T + padT
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, w=w),
+        grid=(Tp // bt,),
+        in_specs=[pl.BlockSpec((bt, M, W), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((bt, M), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, M), jnp.float32),
+        interpret=interpret,
+    )(masks)
+    return out[:T]

@@ -1,0 +1,20 @@
+"""Public wrapper for the sliding-window Jaccard kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.jaccard.jaccard import jaccard_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("w", "interpret"))
+def window_jaccard(masks: jnp.ndarray, valid: jnp.ndarray, *, w: int,
+                   interpret: bool | None = None) -> jnp.ndarray:
+    """TSA2's d[] signal from packed neighbor masks ([T, M, W], [T, M])."""
+    if interpret is None:
+        interpret = default_interpret()
+    masks = jnp.where(valid[..., None], masks, jnp.uint32(0))
+    return jaccard_pallas(masks, w=w, interpret=interpret)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the sliding-window Jaccard kernel (bit-expanded)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def jaccard_ref(masks: jnp.ndarray, w: int) -> jnp.ndarray:
+    """[T, M, W] uint32 packed -> [T, M] Jaccard dissimilarity d[n]."""
+    T, M, W = masks.shape
+    bits = ((masks[..., None] >> jnp.arange(32, dtype=jnp.uint32)) & 1)
+    bits = bits.astype(bool).reshape(T, M, W * 32)
+
+    def union_over(lo, hi):          # inclusive index window per position
+        out = jnp.zeros_like(bits)
+        for k in range(lo, hi + 1):
+            if k <= 0:
+                src = jnp.pad(bits[:, -k:], ((0, 0), (0, -k), (0, 0)))
+            else:
+                src = jnp.pad(bits[:, :M - k], ((0, 0), (k, 0), (0, 0)))
+            out = out | src
+        return out
+
+    l1 = union_over(1, w)            # positions n-w .. n-1
+    l2 = union_over(-(w - 1), 0)     # positions n .. n+w-1
+    inter = jnp.sum(l1 & l2, axis=-1).astype(jnp.float32)
+    union = jnp.sum(l1 | l2, axis=-1).astype(jnp.float32)
+    return jnp.where(union > 0, 1.0 - inter / jnp.maximum(union, 1.0), 0.0)

@@ -1,0 +1,33 @@
+"""Public wrapper: exact pairwise (weighted) LCSS similarity via Pallas."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import default_interpret
+from repro.kernels.lcss.lcss import lcss_pallas, shear_weights
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lcss_scores(rx, ry, rt, rv, sx, sy, st, sv, eps_sp, eps_t,
+                *, interpret: bool | None = None) -> jnp.ndarray:
+    """[B, 2] raw DP scores (weighted Eq. 2 numerator, classical count)."""
+    if interpret is None:
+        interpret = default_interpret()
+    ws = shear_weights(rx, ry, rt, rv, sx, sy, st, sv, eps_sp, eps_t)
+    scores = lcss_pallas(ws, interpret=interpret)
+    return jnp.maximum(scores, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lcss_similarity(rx, ry, rt, rv, sx, sy, st, sv, eps_sp, eps_t,
+                    *, interpret: bool | None = None) -> jnp.ndarray:
+    """Eq. 1 (channel 1) and Eq. 2 (channel 0) similarities, [B, 2]."""
+    scores = lcss_scores(rx, ry, rt, rv, sx, sy, st, sv, eps_sp, eps_t,
+                         interpret=interpret)
+    n = jnp.sum(rv, axis=1)
+    m = jnp.sum(sv, axis=1)
+    denom = jnp.maximum(jnp.minimum(n, m), 1).astype(jnp.float32)
+    return scores / denom[:, None]

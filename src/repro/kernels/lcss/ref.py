@@ -1,0 +1,51 @@
+"""Pure-jnp oracle: weighted + classical LCSS via row-scan DP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def lcss_ref(rx, ry, rt, rv, sx, sy, st, sv, eps_sp, eps_t):
+    """Batched DP, [B, N] x [B, M] -> scores [B, 2] (weighted, count)."""
+    dx = rx[:, :, None] - sx[:, None, :]
+    dy = ry[:, :, None] - sy[:, None, :]
+    dt = jnp.abs(rt[:, :, None] - st[:, None, :])
+    d = jnp.sqrt(dx * dx + dy * dy)
+    ok = (d <= eps_sp) & (dt <= eps_t) & rv[:, :, None] & sv[:, None, :]
+    w = jnp.where(ok, 1.0 - d / eps_sp, NEG)
+    u = jnp.where(ok, 1.0, NEG)
+    wu = jnp.stack([w, u], axis=1)                      # [B, 2, N, M]
+
+    B, ch, N, M = wu.shape
+
+    def row_step(prev_row, w_row):
+        # prev_row: [B, 2, M] = L[i-1, :]; w_row: [B, 2, M] = w[i, :]
+        diag = jnp.concatenate(
+            [jnp.zeros((B, ch, 1)), prev_row[..., :-1]], axis=-1)
+        cand = diag + w_row                             # match option
+
+        def col_scan(carry, xs):
+            up, c = xs                                  # [B, 2] each
+            cur = jnp.maximum(jnp.maximum(up, carry), c)
+            cur = jnp.maximum(cur, 0.0)
+            return cur, cur
+
+        xs = (jnp.moveaxis(prev_row, -1, 0), jnp.moveaxis(cand, -1, 0))
+        _, cols = jax.lax.scan(col_scan, jnp.zeros((B, ch)), xs)
+        return jnp.moveaxis(cols, 0, -1), None
+
+    rows = jnp.moveaxis(wu, 2, 0)                       # [N, B, 2, M]
+    last_row, _ = jax.lax.scan(
+        lambda c, r: row_step(c, r), jnp.zeros((B, ch, M)), rows)
+    return last_row[..., -1]                            # [B, 2]
+
+
+def lcss_similarity_ref(rx, ry, rt, rv, sx, sy, st, sv, eps_sp, eps_t):
+    """Eq. 1 / Eq. 2 similarities in [0, 1]: returns [B, 2]."""
+    scores = lcss_ref(rx, ry, rt, rv, sx, sy, st, sv, eps_sp, eps_t)
+    n = jnp.sum(rv, axis=1)
+    m = jnp.sum(sv, axis=1)
+    denom = jnp.maximum(jnp.minimum(n, m), 1).astype(jnp.float32)
+    return scores / denom[:, None]

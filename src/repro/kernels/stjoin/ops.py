@@ -1,0 +1,61 @@
+"""Public jit'd wrapper: TrajectoryBatch-level subtrajectory join via Pallas."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.geometry import filter_delta_t
+from repro.core.types import JoinResult, TrajectoryBatch
+from repro.kernels import default_interpret
+from repro.kernels.stjoin.stjoin import stjoin_pallas
+
+
+def _pad_to(x: jnp.ndarray, mult: int, axis: int, fill):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "bc", "bm", "interpret"))
+def best_match_join_kernel(ref: TrajectoryBatch, cand: TrajectoryBatch,
+                           eps_sp, eps_t, *, bp=256, bc=8, bm=128,
+                           interpret: bool | None = None) -> JoinResult:
+    if interpret is None:
+        interpret = default_interpret()
+    T, M = ref.x.shape
+    C, Mc = cand.x.shape
+
+    rx = _pad_to(ref.x.reshape(-1), bp, 0, 0.0)
+    ry = _pad_to(ref.y.reshape(-1), bp, 0, 0.0)
+    rt = _pad_to(ref.t.reshape(-1), bp, 0, 0.0)
+    rok = _pad_to(ref.valid.reshape(-1), bp, 0, False)
+    rid = _pad_to(
+        jnp.broadcast_to(ref.traj_id[:, None], (T, M)).reshape(-1), bp, 0, -1)
+
+    cx = _pad_to(_pad_to(cand.x, bm, 1, 0.0), bc, 0, 0.0)
+    cy = _pad_to(_pad_to(cand.y, bm, 1, 0.0), bc, 0, 0.0)
+    ct = _pad_to(_pad_to(cand.t, bm, 1, 0.0), bc, 0, 0.0)
+    cok = _pad_to(_pad_to(cand.valid, bm, 1, False), bc, 0, False)
+    cid = _pad_to(cand.traj_id, bc, 0, -2)
+
+    w, idx = stjoin_pallas(rx, ry, rt, rid, rok, cx, cy, ct, cid, cok,
+                           eps_sp, eps_t, bp=bp, bc=bc, bm=bm,
+                           interpret=interpret)
+    w = w[:T * M, :C].reshape(T, M, C)
+    idx = idx[:T * M, :C].reshape(T, M, C)
+    return JoinResult(best_w=w, best_idx=idx)
+
+
+def subtrajectory_join(ref: TrajectoryBatch, cand: TrajectoryBatch,
+                       eps_sp, eps_t, delta_t=0.0, **kw) -> JoinResult:
+    """Kernel-backed Problem 1 (join + delta_t refine)."""
+    j = best_match_join_kernel(ref, cand, eps_sp, eps_t, **kw)
+    dt = jnp.asarray(delta_t, jnp.float32)
+    return jax.lax.cond(
+        dt > 0.0, lambda jj: filter_delta_t(jj, ref.t, dt), lambda jj: jj, j)

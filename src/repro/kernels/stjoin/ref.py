@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the stjoin kernel (same flattened contract)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def stjoin_ref(ref_x, ref_y, ref_t, ref_id, ref_ok,
+               cand_x, cand_y, cand_t, cand_id, cand_ok,
+               eps_sp, eps_t):
+    """Returns (best_w[P, C] f32, best_idx[P, C] i32)."""
+    dx = ref_x[:, None, None] - cand_x[None, :, :]
+    dy = ref_y[:, None, None] - cand_y[None, :, :]
+    dt = jnp.abs(ref_t[:, None, None] - cand_t[None, :, :])
+    d2 = dx * dx + dy * dy
+    ok = (d2 <= eps_sp * eps_sp) & (dt <= eps_t)
+    ok &= ref_ok[:, None, None] & cand_ok[None, :, :]
+    ok &= ref_id[:, None, None] != cand_id[None, :, None]
+    w = jnp.where(ok, 1.0 - jnp.sqrt(d2) / eps_sp, -1.0)
+    best_w = jnp.max(w, axis=-1)
+    best_idx = jnp.where(best_w > 0.0,
+                         jnp.argmax(w, axis=-1).astype(jnp.int32), -1)
+    return jnp.maximum(best_w, 0.0), best_idx

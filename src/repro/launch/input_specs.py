@@ -1,0 +1,66 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation ever happens here: everything is abstract (the
+shannon/kernels pattern) — weak-type-correct, shardable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import SHAPES, get_arch
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.train.step import TrainState, make_train_state
+
+
+def abstract_train_state(cfg: ModelConfig, ep_degree: int = 1) -> TrainState:
+    return jax.eval_shape(
+        lambda: make_train_state(jax.random.PRNGKey(0), cfg,
+                                 ep_degree=ep_degree))
+
+
+def abstract_params(cfg: ModelConfig, ep_degree: int = 1):
+    return jax.eval_shape(
+        lambda: tf.init_model(jax.random.PRNGKey(0), cfg,
+                              ep_degree=ep_degree))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: tf.init_cache(cfg, batch, max_len))
+
+
+def input_specs(arch: str, shape: str) -> dict:
+    """Abstract model inputs for one cell.  Keys depend on the shape kind:
+    train  -> tokens, labels (+ frontend)
+    prefill-> tokens (+ frontend), cache
+    decode -> tokens, cache, index
+    """
+    cfg = get_arch(arch)
+    sh = SHAPES[shape]
+    B, L, kind = sh["global_batch"], sh["seq_len"], sh["kind"]
+
+    def tok(b, l):
+        if cfg.family == "audio":
+            return jax.ShapeDtypeStruct((b, cfg.n_codebooks, l), jnp.int32)
+        return jax.ShapeDtypeStruct((b, l), jnp.int32)
+
+    out = {"cfg": cfg, "kind": kind, "batch": B, "seq": L}
+    if kind == "train":
+        out["tokens"] = tok(B, L)
+        out["labels"] = tok(B, L)
+        if cfg.family == "vlm":
+            out["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.vision_tokens, cfg.d_vision), jnp.float32)
+    elif kind == "prefill":
+        Lt = L - (cfg.vision_tokens if cfg.family == "vlm" else 0)
+        out["tokens"] = tok(B, Lt)
+        out["cache"] = abstract_cache(cfg, B, L)
+        if cfg.family == "vlm":
+            out["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.vision_tokens, cfg.d_vision), jnp.float32)
+    elif kind == "decode":
+        out["tokens"] = tok(B, 1)
+        out["cache"] = abstract_cache(cfg, B, L)
+        out["index"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return out

@@ -1,0 +1,37 @@
+"""Production meshes.
+
+Functions, not module-level constants, so importing this module never
+touches jax device state (required for the dry-run's device-count forcing).
+
+  make_production_mesh(multi_pod=False)
+      (16, 16) ('data', 'model')          — one v5e-256 pod
+      (2, 16, 16) ('pod', 'data', 'model')— two pods (DCN over 'pod')
+
+  make_dsc_mesh(multi_pod=False)
+      ('part', 'model') view of the same devices for the DSC pipeline:
+      'part' = temporal partitions (folded pod x data), 'model' =
+      candidate-trajectory parallelism.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dsc_mesh(*, multi_pod: bool = False, model: int = 16):
+    n_devices = 512 if multi_pod else 256
+    return jax.make_mesh((n_devices // model, model), ("part", "model"))
+
+
+def make_test_mesh(part: int = 4, model: int = 2):
+    """Small mesh for multi-device CPU tests (host-device forcing)."""
+    return jax.make_mesh((part, model), ("part", "model"))
+
+
+def dp_axes_of(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -1,0 +1,97 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it runs reduced configs end-to-end (the full configs
+are exercised by the dry-run); on a real pod the same entrypoint runs the
+full config on the production mesh with checkpoint/restart.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_arch, reduced_config
+from repro.data.pipeline import TokenPipeline
+from repro.distributed.straggler import StragglerMonitor
+from repro.models import transformer as tf
+from repro.train.step import TrainState, make_train_state, train_step
+from repro.utils.logging import get_logger
+
+log = get_logger("train")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (pod-scale) config, not the reduced")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if not args.full:
+        cfg = reduced_config(cfg)
+    pipe = TokenPipeline(cfg, args.batch, args.seq, seed=args.seed)
+    state = make_train_state(jax.random.PRNGKey(args.seed), cfg)
+
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if mgr and args.resume:
+        try:
+            state, start = mgr.restore(state)
+            log.info("resumed from step %d", start)
+        except FileNotFoundError:
+            log.info("no checkpoint found; starting fresh")
+
+    import functools
+    step_fn = jax.jit(functools.partial(
+        train_step, cfg=cfg, peak_lr=args.lr, warmup=20,
+        total_steps=args.steps), donate_argnums=(0,))
+
+    monitor = StragglerMonitor(n_hosts=1)
+    losses = []
+    t_last = time.time()
+    for i in range(start, args.steps):
+        batch = pipe.batch_at(i)
+        fe = batch.get("frontend")
+        if fe is not None:
+            state, metrics = step_fn(state, jnp.asarray(batch["tokens"]),
+                                     jnp.asarray(batch["labels"]),
+                                     frontend_inputs=jnp.asarray(fe))
+        else:
+            state, metrics = step_fn(state, jnp.asarray(batch["tokens"]),
+                                     jnp.asarray(batch["labels"]))
+        now = time.time()
+        monitor.record(0, now - t_last)
+        t_last = now
+        losses.append(float(metrics["loss"]))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            log.info("step %d loss %.4f lr %.2e gnorm %.3f", i,
+                     losses[-1], float(metrics["lr"]),
+                     float(metrics["grad_norm"]))
+        if mgr and (i + 1) % args.ckpt_every == 0:
+            mgr.save_async(i + 1, state)
+    if mgr:
+        mgr.wait()
+        mgr.save(args.steps, state)
+    first = np.mean(losses[:10])
+    last = np.mean(losses[-10:])
+    log.info("loss %.4f -> %.4f (%s)", first, last,
+             "IMPROVED" if last < first else "no improvement")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

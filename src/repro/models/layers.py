@@ -1,0 +1,263 @@
+"""Shared transformer building blocks — pure-pytree parameters, no flax.
+
+Every block is a pair of functions: ``init_*(key, cfg) -> params`` and
+``apply(params, x, ...) -> y``.  Parameters are plain dicts of jnp arrays so
+the whole model is a pytree that pjit/GSPMD shards via the rules in
+``repro.distributed.partition``.
+
+Compute dtype is bf16 (TPU-native), parameters & reductions f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+# ----------------------------- norms ----------------------------------------
+
+def init_rmsnorm(d):
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps=1e-6, unit_offset=True):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + p["scale"]) if unit_offset else p["scale"]
+    return (x * scale).astype(dt)
+
+
+# ----------------------------- rope ------------------------------------------
+
+def rope(x, positions, theta=10_000.0):
+    """x: [..., L, H, hd]; positions: [..., L]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freq  # [...,L,1,half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------- attention -------------------------------------
+
+def init_attention(key, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(ks[0], (d, cfg.n_heads, hd)),
+        "wk": _dense_init(ks[1], (d, cfg.n_kv_heads, hd)),
+        "wv": _dense_init(ks[2], (d, cfg.n_kv_heads, hd)),
+        "wo": _dense_init(ks[3], (cfg.n_heads, hd, d)),
+    }
+
+
+def _softcap(x, cap):
+    return cap * jnp.tanh(x / cap)
+
+
+ATTN_Q_CHUNK = 512
+ATTN_KV_CHUNK = 1024
+ATTN_CHUNK_THRESHOLD = 2048   # use online-softmax path when L_q > this
+
+
+def _mask_block(q_pos, kv_pos, sliding_window, prefix_len, max_kv):
+    """[Lq, Lkv] bool mask from position vectors (causal/window/prefix)."""
+    causal = kv_pos[None, :] <= q_pos[:, None]
+    if prefix_len is not None:
+        bidir = (kv_pos[None, :] < prefix_len) & (q_pos[:, None] < prefix_len)
+        causal = causal | bidir
+    if sliding_window is not None:
+        causal &= kv_pos[None, :] > (q_pos[:, None] - sliding_window)
+    if max_kv is not None:
+        causal &= kv_pos[None, :] <= max_kv
+    return causal
+
+
+def _attend_dense(qg, k, v, q_pos, kv_pos, cfg, sliding_window, prefix_len,
+                  max_kv):
+    """Reference path: materializes [B, Lq, KV, G, M] logits."""
+    logits = jnp.einsum("blkgh,bmkh->blkgm", qg, k)
+    if cfg.attn_softcap is not None:
+        logits = _softcap(logits, cfg.attn_softcap)
+    mask = _mask_block(q_pos, kv_pos, sliding_window, prefix_len, max_kv)
+    logits = jnp.where(mask[None, :, None, None, :],
+                       logits.astype(jnp.float32), -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(qg.dtype)
+    return jnp.einsum("blkgm,bmkh->blkgh", probs, v)
+
+
+def _attend_online(qg, k, v, q_pos, kv_pos, cfg, sliding_window, prefix_len,
+                   max_kv):
+    """Online-softmax (flash-style, pure XLA): outer map over query chunks,
+    inner scan over KV chunks with running (max, denom, acc) — peak memory
+    O(Bq_chunk x kv_chunk) instead of O(Lq x Lkv).  This is the memory shape
+    a fused TPU attention kernel would have; it keeps the dry-run's
+    memory_analysis honest at 32k/500k sequence lengths."""
+    B, Lq, KV, G, hd = qg.shape
+    M = k.shape[1]
+    qc, kc = ATTN_Q_CHUNK, ATTN_KV_CHUNK
+    qc = min(qc, Lq)
+    while Lq % qc:
+        qc //= 2
+    kc = min(kc, M)
+    while M % kc:
+        kc //= 2
+    nq, nk = Lq // qc, M // kc
+
+    kb = k.reshape(B, nk, kc, KV, hd)
+    vb = v.reshape(B, nk, kc, KV, hd)
+    kv_pos_b = kv_pos.reshape(nk, kc)
+
+    def q_chunk(args):
+        qi, qp = args                              # [B, qc, KV, G, hd], [qc]
+
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            kj, vj, kvp = xs                       # [B, kc, KV, hd], [kc]
+            logits = jnp.einsum("bqkgh,bmkh->bqkgm", qi, kj)
+            if cfg.attn_softcap is not None:
+                logits = _softcap(logits, cfg.attn_softcap)
+            msk = _mask_block(qp, kvp, sliding_window, prefix_len, max_kv)
+            logits = jnp.where(msk[None, :, None, None, :],
+                               logits.astype(jnp.float32), -1e30)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            scale_old = jnp.exp(m - m_new)
+            p_blk = jnp.exp(logits - m_new[..., None])
+            l_new = l * scale_old + p_blk.sum(axis=-1)
+            acc_new = (acc * scale_old[..., None]
+                       + jnp.einsum("bqkgm,bmkh->bqkgh",
+                                    p_blk.astype(qi.dtype), vj))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, qc, KV, G), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, qc, KV, G), jnp.float32)
+        a0 = jnp.zeros((B, qc, KV, G, hd), jnp.float32)
+        xs = (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), kv_pos_b)
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0), xs)
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    qb = qg.reshape(B, nq, qc, KV, G, hd)
+    out = jax.lax.map(q_chunk,
+                      (jnp.moveaxis(qb, 1, 0), q_pos.reshape(nq, qc)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Lq, KV, G, hd)
+    return out.astype(qg.dtype)
+
+
+def attention(p, x, cfg: ModelConfig, positions, *, mask=None,
+              cache: Optional[dict] = None, cache_index=None,
+              sliding_window: Optional[int] = None,
+              prefix_len: Optional[int] = None):
+    """GQA attention with optional RoPE cache, softcap, sliding window and
+    prefix-LM (bidirectional prefix) masking.
+
+    x: [B, L, D].  With ``cache`` given (decode), L == 1 and ``cache_index``
+    is the write position; cache layout: k/v [B, L_max, KV, hd].
+    Long sequences take the online-softmax (flash-style) path.
+    Returns (out, new_cache).
+    """
+    del mask
+    B, L, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    xc = x.astype(COMPUTE_DTYPE)
+
+    q = jnp.einsum("bld,dhk->blhk", xc, p["wq"].astype(COMPUTE_DTYPE))
+    k = jnp.einsum("bld,dhk->blhk", xc, p["wk"].astype(COMPUTE_DTYPE))
+    v = jnp.einsum("bld,dhk->blhk", xc, p["wv"].astype(COMPUTE_DTYPE))
+
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    scale = cfg.query_scale if cfg.query_scale is not None else hd ** -0.5
+    q = q * scale
+
+    q_pos = positions
+    if cache is not None:
+        k = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0))
+        new_cache = {"k": k, "v": v}
+        kv_positions = jnp.arange(k.shape[1], dtype=jnp.int32)
+        q_pos = cache_index + jnp.arange(L, dtype=jnp.int32)
+        max_kv = cache_index + L - 1
+    else:
+        new_cache = None
+        kv_positions = positions
+        max_kv = None
+
+    G = H // KV
+    qg = q.reshape(B, L, KV, G, hd)
+    if L > ATTN_CHUNK_THRESHOLD:
+        out = _attend_online(qg, k, v, q_pos, kv_positions, cfg,
+                             sliding_window, prefix_len, max_kv)
+    else:
+        out = _attend_dense(qg, k, v, q_pos, kv_positions, cfg,
+                            sliding_window, prefix_len, max_kv)
+
+    out = out.reshape(B, L, H, hd).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("blhk,hkd->bld", out, p["wo"].astype(COMPUTE_DTYPE))
+    return out.astype(x.dtype), new_cache
+
+
+# ----------------------------- mlp -------------------------------------------
+
+def init_mlp(key, d, d_ff):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi_gate": _dense_init(ks[0], (d, d_ff)),
+        "wi_up": _dense_init(ks[1], (d, d_ff)),
+        "wo": _dense_init(ks[2], (d_ff, d)),
+    }
+
+
+def mlp(p, x, act="silu"):
+    xc = x.astype(COMPUTE_DTYPE)
+    g = jnp.einsum("bld,df->blf", xc, p["wi_gate"].astype(COMPUTE_DTYPE))
+    u = jnp.einsum("bld,df->blf", xc, p["wi_up"].astype(COMPUTE_DTYPE))
+    if act == "silu":
+        h = jax.nn.silu(g) * u
+    elif act == "gelu":
+        h = jax.nn.gelu(g, approximate=True) * u
+    else:
+        raise ValueError(act)
+    out = jnp.einsum("blf,fd->bld", h, p["wo"].astype(COMPUTE_DTYPE))
+    return out.astype(x.dtype)
+
+
+# ----------------------------- embeddings ------------------------------------
+
+def init_embedding(key, vocab, d):
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed(p, tokens, scale_by_sqrt_d=False):
+    x = jnp.take(p["table"].astype(COMPUTE_DTYPE), tokens, axis=0)
+    if scale_by_sqrt_d:
+        x = x * jnp.asarray(p["table"].shape[1] ** 0.5, COMPUTE_DTYPE)
+    return x
+
+
+def unembed(p, x, tied_table=None, final_softcap=None):
+    table = (tied_table if tied_table is not None else p["table"])
+    logits = jnp.einsum("bld,vd->blv", x.astype(COMPUTE_DTYPE),
+                        table.astype(COMPUTE_DTYPE)).astype(jnp.float32)
+    if final_softcap is not None:
+        logits = _softcap(logits, final_softcap)
+    return logits

@@ -1,0 +1,137 @@
+"""Chunked linear attention with per-step decay — the shared TPU-native core
+of RWKV-6 (Finch) and Mamba-2 (SSD).
+
+Both recurrences are instances of
+
+    S_t = diag(exp(ld_t)) . S_{t-1} + k_t v_t^T          (state [K, V])
+    mamba mode:  y_t = q_t . S_t
+    rwkv  mode:  y_t = q_t . (S_{t-1} + (u (.) k_t) v_t^T)
+
+A naive scan is sequential and (on TPU) leaves the MXU idle; the chunked form
+processes Q-step chunks with dense matmuls (intra-chunk via cumulative
+log-decay differences, inter-chunk via the carried state) — the standard
+SSD/FLA decomposition, adapted here once for both archs.
+
+Numerical note: intra-chunk factors use exponents relative to the chunk
+start, clamped at +-CLAMP; pairs whose true factor underflows are ~0 anyway.
+Validated against the naive scan oracle in tests/test_linear_attn.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+CLAMP = 25.0
+
+
+def _chunk_scan(q, k, v, ld, u, mode: str, state0, chunk: int):
+    """q,k: [B,H,L,K]; v: [B,H,L,V]; ld: [B,H,L,K] (or broadcastable);
+    state0: [B,H,K,V].  Returns (y [B,H,L,V], state [B,H,K,V])."""
+    B, H, L, K = q.shape
+    V = v.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    n = L // chunk
+
+    qc = q.reshape(B, H, n, chunk, K)
+    kc = k.reshape(B, H, n, chunk, K)
+    vc = v.reshape(B, H, n, chunk, V)
+    ldc = jnp.broadcast_to(ld, (B, H, L, K)).reshape(B, H, n, chunk, K)
+    ldc = ldc.astype(jnp.float32)
+
+    # inclusive cumulative log-decay within each chunk
+    csum = jnp.cumsum(ldc, axis=3)                     # [B,H,n,Q,K]
+    total = csum[..., -1, :]                           # [B,H,n,K]
+
+    # factors relative to chunk start
+    q_fac = csum if mode == "mamba" else csum - ldc    # c_i vs c_{i-1}
+    qs = qc * jnp.exp(jnp.clip(q_fac, -CLAMP, CLAMP)).astype(qc.dtype)
+    ks = kc * jnp.exp(jnp.clip(-csum, -CLAMP, CLAMP)).astype(kc.dtype)
+
+    # intra-chunk attention
+    att = jnp.einsum("bhnik,bhnjk->bhnij", qs, ks)     # [B,H,n,Q,Q]
+    ii = jnp.arange(chunk)
+    if mode == "mamba":
+        m = ii[:, None] >= ii[None, :]
+    else:
+        m = ii[:, None] > ii[None, :]
+    att = jnp.where(m[None, None, None], att, 0.0)
+    y_intra = jnp.einsum("bhnij,bhnjv->bhniv", att, vc)
+    if mode == "rwkv":
+        bonus = jnp.einsum("bhnik,bhniv->bhniv",
+                           qc * (u[None, :, None, None, :] * kc), vc)
+        y_intra = y_intra + bonus
+
+    # inter-chunk: scan the carried state over chunks
+    k_tail = kc * jnp.exp(
+        jnp.clip(total[..., None, :] - csum, -CLAMP, CLAMP)).astype(kc.dtype)
+
+    def body(S, xs):
+        qs_i, k_tail_i, v_i, total_i = xs
+        y_state = jnp.einsum("bhik,bhkv->bhiv", qs_i, S.astype(qs_i.dtype))
+        S = (S * jnp.exp(jnp.clip(total_i, -CLAMP, CLAMP))[..., None]
+             + jnp.einsum("bhik,bhiv->bhkv", k_tail_i,
+                          v_i).astype(jnp.float32))
+        return S, y_state
+
+    xs = (jnp.moveaxis(qs, 2, 0), jnp.moveaxis(k_tail, 2, 0),
+          jnp.moveaxis(vc, 2, 0), jnp.moveaxis(total, 2, 0))
+    state, y_state = jax.lax.scan(body, state0.astype(jnp.float32), xs)
+    y = y_intra + jnp.moveaxis(y_state, 0, 2)
+    return y.reshape(B, H, L, V), state
+
+
+def chunked_linear_attn(q, k, v, log_decay, *, mode: str = "mamba",
+                        u=None, state0=None, chunk: int = 64):
+    """Public entry.  Pads L to a chunk multiple; see module docstring."""
+    B, H, L, K = q.shape
+    V = v.shape[-1]
+    if state0 is None:
+        state0 = jnp.zeros((B, H, K, V), jnp.float32)
+    pad = (-L) % chunk
+    if pad:
+        zq = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        q, k, v = zq(q), zq(k), zq(v)
+        log_decay = jnp.pad(
+            jnp.broadcast_to(log_decay, (B, H, L, K)),
+            ((0, 0), (0, 0), (0, pad), (0, 0)))
+    if u is None:
+        u = jnp.zeros((H, K), q.dtype)
+    y, state = _chunk_scan(q, k, v, log_decay, u, mode, state0, chunk)
+    return y[:, :, :L], state
+
+
+def linear_attn_step(q, k, v, log_decay, state, *, mode="mamba", u=None):
+    """Single decode step.  q,k: [B,H,K]; v: [B,H,V]; state [B,H,K,V]."""
+    a = jnp.exp(log_decay.astype(jnp.float32))         # [B,H,K] or [B,H,1]
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v).astype(jnp.float32)
+    if mode == "mamba":
+        state = state * a[..., None] + kv
+        y = jnp.einsum("bhk,bhkv->bhv", q, state.astype(q.dtype))
+    else:
+        mix = state + (u[None] * k).astype(jnp.float32)[..., None] * \
+            v.astype(jnp.float32)[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", q, mix.astype(q.dtype))
+        state = state * a[..., None] + kv
+    return y, state
+
+
+def naive_scan_ref(q, k, v, log_decay, *, mode="mamba", u=None, state0=None):
+    """O(L) sequential oracle used by tests."""
+    B, H, L, K = q.shape
+    V = v.shape[-1]
+    if state0 is None:
+        state0 = jnp.zeros((B, H, K, V), jnp.float32)
+    if u is None:
+        u = jnp.zeros((H, K), q.dtype)
+    ld = jnp.broadcast_to(log_decay, (B, H, L, K))
+
+    def body(S, xs):
+        q_t, k_t, v_t, ld_t = xs
+        y, S = linear_attn_step(q_t, k_t, v_t, ld_t, S, mode=mode, u=u)
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (q, k, v, ld))
+    state, ys = jax.lax.scan(body, state0, xs)
+    return jnp.moveaxis(ys, 0, 2), state

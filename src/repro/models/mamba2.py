@@ -1,0 +1,107 @@
+"""Mamba-2 block (SSD form), used by zamba2-1.2b.
+
+Structure per arXiv:2405.21060: fused input projection producing
+(z, x, B, C, dt), short causal depthwise conv over (x, B, C), scalar-per-head
+data-dependent decay ``a_t = exp(-dt * exp(A_log))``, the SSD recurrence via
+the shared chunked linear-attention core, gated output.
+
+State per layer: (conv [B, d_conv-1, d_conv_ch], ssd [B, H, N, P]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import COMPUTE_DTYPE, init_rmsnorm, rmsnorm
+from repro.models.linear_attn import chunked_linear_attn, linear_attn_step
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.d_state      # x + B + C go through the conv
+    return s, d_in, H, conv_ch
+
+
+def init_mamba_block(key, cfg: ModelConfig):
+    s, d_in, H, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * d_in + 2 * s.d_state + H     # z, x, B, C, dt
+    return {
+        "ln": init_rmsnorm(d),
+        "in_proj": jax.random.normal(
+            ks[0], (d, proj_out), jnp.float32) / jnp.sqrt(d),
+        "conv_w": jax.random.normal(
+            ks[1], (s.d_conv, conv_ch), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.expm1(jax.random.uniform(
+                ks[2], (H,), jnp.float32, 1e-3, 0.1))),
+        "norm": init_rmsnorm(d_in),
+        "out_proj": jax.random.normal(
+            ks[3], (d_in, d), jnp.float32) / jnp.sqrt(d_in),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise causal conv.  x: [B, L, C]; w: [K, C]; state [B, K-1, C]."""
+    Kc = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], Kc - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None]
+              for i in range(Kc))
+    new_state = xp[:, -(Kc - 1):]
+    return out + b[None, None], new_state
+
+
+def mamba_block(p, x, cfg: ModelConfig, state=None):
+    """x: [B, L, D] -> (y, new_state)."""
+    B, L, D = x.shape
+    s, d_in, H, conv_ch = _dims(cfg)
+    P, N = s.head_dim, s.d_state
+    if state is None:
+        state = {
+            "conv": jnp.zeros((B, s.d_conv - 1, conv_ch), COMPUTE_DTYPE),
+            "ssd": jnp.zeros((B, H, N, P), jnp.float32),
+        }
+
+    xa = rmsnorm(p["ln"], x, cfg.norm_eps)
+    proj = (xa.astype(COMPUTE_DTYPE)
+            @ p["in_proj"].astype(COMPUTE_DTYPE))    # [B, L, proj_out]
+    z, xc, Bv, Cv, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+
+    conv_in = jnp.concatenate([xc, Bv, Cv], axis=-1)
+    conv_out, conv_state = _causal_conv(
+        conv_in, p["conv_w"].astype(COMPUTE_DTYPE),
+        p["conv_b"].astype(COMPUTE_DTYPE), state["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    xc, Bv, Cv = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None])        # [B, L, H]
+    a = -jnp.exp(p["A_log"])[None, None] * dt               # log decay < 0
+
+    # heads: x -> v [B,H,L,P]; B -> k [B,H,L,N]; C -> q
+    v = xc.reshape(B, L, H, P).transpose(0, 2, 1, 3)
+    v = v * dt.transpose(0, 2, 1)[..., None].astype(v.dtype)  # dt-scaled input
+    k = jnp.broadcast_to(Bv[:, None], (B, H, L, N))
+    q = jnp.broadcast_to(Cv[:, None], (B, H, L, N))
+    ld = a.transpose(0, 2, 1)[..., None]                     # [B,H,L,1]
+
+    y, ssd = chunked_linear_attn(q, k, v, ld, mode="mamba",
+                                 state0=state["ssd"], chunk=s.chunk)
+    y = y + p["D"][None, :, None, None].astype(y.dtype) * \
+        xc.reshape(B, L, H, P).transpose(0, 2, 1, 3)   # skip path
+    y = y.transpose(0, 2, 1, 3).reshape(B, L, d_in)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = (y.astype(COMPUTE_DTYPE)
+           @ p["out_proj"].astype(COMPUTE_DTYPE)).astype(x.dtype)
+    new_state = {"conv": conv_state, "ssd": ssd}
+    return x + out, new_state

@@ -1,0 +1,131 @@
+"""RWKV-6 (Finch) block: data-dependent-decay time mix + channel mix.
+
+Faithful to arXiv:2404.05892's structure: token-shift ddlerp mixing with a
+low-rank (LoRA) data-dependent part for the five mix vectors, a LoRA'd
+data-dependent per-channel decay ``w``, the u-bonus WKV recurrence, and the
+squared-ReLU channel mix.  The WKV recurrence runs through the shared
+chunked linear-attention core (``repro.models.linear_attn``) so prefill is
+dense matmuls; decode is the O(1) state step.
+
+State per layer: (shift_tm [B, D], shift_cm [B, D], wkv [B, H, K, K]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import COMPUTE_DTYPE, init_rmsnorm, rmsnorm
+from repro.models.linear_attn import chunked_linear_attn, linear_attn_step
+
+
+def init_rwkv_block(key, cfg: ModelConfig):
+    d = cfg.d_model
+    r = cfg.rwkv
+    ks = jax.random.split(key, 16)
+    s = 1.0 / jnp.sqrt(d)
+    H = d // r.head_dim
+    p = {
+        "ln_tm": init_rmsnorm(d), "ln_cm": init_rmsnorm(d),
+        # ddlerp base mixes (5: r, k, v, w, g) + LoRA
+        "mix_base": jax.random.uniform(ks[0], (5, d), jnp.float32),
+        "mix_lora_a": jax.random.normal(ks[1], (d, r.lora_mix), jnp.float32) * s,
+        "mix_lora_b": jax.random.normal(
+            ks[2], (5, r.lora_mix, d), jnp.float32) * 0.01,
+        "mix_first": jax.random.uniform(ks[3], (d,), jnp.float32),
+        # projections
+        "wr": jax.random.normal(ks[4], (d, d), jnp.float32) * s,
+        "wk": jax.random.normal(ks[5], (d, d), jnp.float32) * s,
+        "wv": jax.random.normal(ks[6], (d, d), jnp.float32) * s,
+        "wg": jax.random.normal(ks[7], (d, d), jnp.float32) * s,
+        "wo": jax.random.normal(ks[8], (d, d), jnp.float32) * s,
+        # decay: w = exp(-exp(w0 + lora(x)))
+        "w0": jnp.full((d,), -2.0, jnp.float32)
+        + jax.random.normal(ks[9], (d,), jnp.float32) * 0.1,
+        "w_lora_a": jax.random.normal(ks[10], (d, r.lora_w), jnp.float32) * s,
+        "w_lora_b": jax.random.normal(
+            ks[11], (r.lora_w, d), jnp.float32) * 0.01,
+        "u": jax.random.normal(ks[12], (H, r.head_dim), jnp.float32) * 0.1,
+        "ln_x": init_rmsnorm(d),
+        # channel mix
+        "cm_mix": jax.random.uniform(ks[13], (2, d), jnp.float32),
+        "cm_k": jax.random.normal(ks[14], (d, cfg.d_ff), jnp.float32) * s,
+        "cm_v": jax.random.normal(
+            ks[15], (cfg.d_ff, d), jnp.float32) / jnp.sqrt(cfg.d_ff),
+        "cm_r": jax.random.normal(ks[7], (d, d), jnp.float32) * s,
+    }
+    return p
+
+
+def _shift(x, shift_state):
+    """Token shift: x_prev[t] = x[t-1]; position 0 reads the carried state.
+    x: [B, L, D]; shift_state: [B, D] -> (x_prev, new_state)."""
+    prev = jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+    return prev, x[:, -1]
+
+
+def rwkv_block(p, x, cfg: ModelConfig, state=None):
+    """x: [B, L, D].  state: dict(shift_tm, shift_cm, wkv) or None.
+    Returns (y, new_state)."""
+    B, L, D = x.shape
+    r = cfg.rwkv
+    H, K = D // r.head_dim, r.head_dim
+    if state is None:
+        state = {
+            "shift_tm": jnp.zeros((B, D), x.dtype),
+            "shift_cm": jnp.zeros((B, D), x.dtype),
+            "wkv": jnp.zeros((B, H, K, K), jnp.float32),
+        }
+
+    # ---- time mix ----
+    xa = rmsnorm(p["ln_tm"], x, cfg.norm_eps)
+    prev, tm_last = _shift(xa, state["shift_tm"])
+    dx = prev - xa
+    mix_x = xa + dx * p["mix_first"][None, None]
+    lora = jnp.einsum("bld,dr->blr", mix_x.astype(COMPUTE_DTYPE),
+                      p["mix_lora_a"].astype(COMPUTE_DTYPE))
+    lora = jnp.tanh(lora)
+    dyn = jnp.einsum("blr,srd->sbld", lora,
+                     p["mix_lora_b"].astype(COMPUTE_DTYPE))
+    mixes = p["mix_base"][:, None, None, :].astype(COMPUTE_DTYPE) + dyn
+    xr, xk, xv, xw, xg = [xa + dx * mixes[i] for i in range(5)]
+
+    rq = (xr.astype(COMPUTE_DTYPE) @ p["wr"].astype(COMPUTE_DTYPE))
+    kk = (xk.astype(COMPUTE_DTYPE) @ p["wk"].astype(COMPUTE_DTYPE))
+    vv = (xv.astype(COMPUTE_DTYPE) @ p["wv"].astype(COMPUTE_DTYPE))
+    gg = jax.nn.silu(xg.astype(COMPUTE_DTYPE) @ p["wg"].astype(COMPUTE_DTYPE))
+
+    wl = jnp.tanh(xw.astype(COMPUTE_DTYPE) @ p["w_lora_a"].astype(
+        COMPUTE_DTYPE)) @ p["w_lora_b"].astype(COMPUTE_DTYPE)
+    log_w = -jnp.exp(
+        jnp.clip(p["w0"][None, None].astype(jnp.float32)
+                 + wl.astype(jnp.float32), -8.0, 2.0))      # [B, L, D] (<0)
+
+    def heads(a):
+        return a.reshape(B, L, H, K).transpose(0, 2, 1, 3)
+
+    y, wkv = chunked_linear_attn(
+        heads(rq), heads(kk), heads(vv),
+        heads(log_w.astype(jnp.float32)), mode="rwkv",
+        u=p["u"].astype(COMPUTE_DTYPE), state0=state["wkv"], chunk=r.chunk)
+    y = y.transpose(0, 2, 1, 3).reshape(B, L, D)
+    y = rmsnorm(p["ln_x"], y, cfg.norm_eps) * gg
+    y = (y @ p["wo"].astype(COMPUTE_DTYPE)).astype(x.dtype)
+    x = x + y
+
+    # ---- channel mix ----
+    xb = rmsnorm(p["ln_cm"], x, cfg.norm_eps)
+    prev_c, cm_last = _shift(xb, state["shift_cm"])
+    dxc = prev_c - xb
+    xk2 = xb + dxc * p["cm_mix"][0][None, None]
+    xr2 = xb + dxc * p["cm_mix"][1][None, None]
+    kcm = jnp.square(jax.nn.relu(
+        xk2.astype(COMPUTE_DTYPE) @ p["cm_k"].astype(COMPUTE_DTYPE)))
+    vcm = kcm @ p["cm_v"].astype(COMPUTE_DTYPE)
+    gate = jax.nn.sigmoid(
+        xr2.astype(COMPUTE_DTYPE) @ p["cm_r"].astype(COMPUTE_DTYPE))
+    x = x + (vcm * gate).astype(x.dtype)
+
+    new_state = {"shift_tm": tm_last.astype(x.dtype),
+                 "shift_cm": cm_last.astype(x.dtype), "wkv": wkv}
+    return x, new_state

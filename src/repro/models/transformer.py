@@ -1,0 +1,421 @@
+"""Unified decoder LM covering all assigned architecture families.
+
+Families
+--------
+dense   llama-style (deepseek-7b, smollm-360m, yi-6b) and gemma-2 variants
+        (local/global alternation, softcaps, pre+post norms)
+moe     qwen2-moe / moonlight (routed + shared experts, first-k dense)
+rwkv    RWKV-6 Finch (attention-free)
+hybrid  zamba2 (Mamba-2 backbone + one *shared* attention block every k)
+vlm     paligemma (SigLIP-stub prefix + gemma backbone, prefix-LM mask)
+audio   musicgen (EnCodec-stub: 4 codebooks summed in, 4 heads out)
+
+Layers are stacked with ``lax.scan`` (stacked [L, ...] params) so the HLO
+stays small at 30-50 layers; per-layer static variation (sliding window,
+first-k-dense) is carried as scanned flag arrays.  ``jax.checkpoint`` wraps
+the scan body under ``remat=True``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as Lyr
+from repro.models import mamba2, moe as moe_mod, rwkv6
+from repro.models.config import ModelConfig
+
+GLOBAL_WINDOW = 1 << 30
+
+
+# --------------------------- block init -------------------------------------
+
+def init_dense_block(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": Lyr.init_rmsnorm(cfg.d_model),
+        "attn": Lyr.init_attention(k1, cfg),
+        "ln2": Lyr.init_rmsnorm(cfg.d_model),
+        "mlp": Lyr.init_mlp(k2, cfg.d_model, cfg.d_ff),
+    }
+    if cfg.gemma_norms:
+        p["post_ln1"] = Lyr.init_rmsnorm(cfg.d_model)
+        p["post_ln2"] = Lyr.init_rmsnorm(cfg.d_model)
+    return p
+
+
+def init_moe_block(key, cfg: ModelConfig, ep_degree: int):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": Lyr.init_rmsnorm(cfg.d_model),
+        "attn": Lyr.init_attention(k1, cfg),
+        "ln2": Lyr.init_rmsnorm(cfg.d_model),
+        "moe": moe_mod.init_moe(k2, cfg.d_model, cfg.moe, ep_degree),
+    }
+
+
+# --------------------------- block apply ------------------------------------
+
+def dense_block(p, x, cfg, positions, window, cache=None, cache_index=None,
+                prefix_len=None):
+    h = Lyr.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, new_cache = Lyr.attention(
+        p["attn"], h, cfg, positions, cache=cache, cache_index=cache_index,
+        sliding_window=window, prefix_len=prefix_len)
+    if cfg.gemma_norms:
+        a = Lyr.rmsnorm(p["post_ln1"], a, cfg.norm_eps)
+    x = x + a
+    h = Lyr.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    m = Lyr.mlp(p["mlp"], h, cfg.hidden_act)
+    if cfg.gemma_norms:
+        m = Lyr.rmsnorm(p["post_ln2"], m, cfg.norm_eps)
+    return x + m, new_cache
+
+
+def moe_block(p, x, cfg, positions, cache=None, cache_index=None,
+              mesh=None, dp_axes=()):
+    h = Lyr.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, new_cache = Lyr.attention(
+        p["attn"], h, cfg, positions, cache=cache, cache_index=cache_index)
+    x = x + a
+    h = Lyr.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if mesh is not None:
+        m, aux, dropped = moe_mod.moe_ffn_shard_map(
+            p["moe"], h, cfg.moe, mesh, dp_axes,
+            quantize_dispatch=cfg.moe.quantize_dispatch)
+    else:
+        m, aux, dropped = moe_mod.moe_ffn(p["moe"], h, cfg.moe)
+    return x + m, new_cache, aux, dropped
+
+
+# --------------------------- model init -------------------------------------
+
+def _stacked(init_fn, key, n):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_model(key, cfg: ModelConfig, *, ep_degree: int = 1):
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": Lyr.init_embedding(
+            keys[0],
+            cfg.vocab_size * (cfg.n_codebooks
+                              if cfg.frontend == "encodec_stub" else 1),
+            cfg.d_model),
+        "final_norm": Lyr.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = Lyr.init_embedding(
+            keys[1],
+            cfg.vocab_size * (cfg.n_codebooks
+                              if cfg.frontend == "encodec_stub" else 1),
+            cfg.d_model)
+    if cfg.frontend == "siglip_stub":
+        params["vision_proj"] = Lyr._dense_init(
+            keys[2], (cfg.d_vision, cfg.d_model))
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        params["layers"] = _stacked(
+            lambda k: init_dense_block(k, cfg), keys[3], cfg.n_layers)
+    elif cfg.family == "moe":
+        fk = cfg.moe.first_k_dense
+        if fk:
+            params["dense_layers"] = _stacked(
+                lambda k: init_dense_block(k, cfg), keys[4], fk)
+        params["layers"] = _stacked(
+            lambda k: init_moe_block(k, cfg, ep_degree), keys[3],
+            cfg.n_layers - fk)
+    elif cfg.family == "rwkv":
+        params["layers"] = _stacked(
+            lambda k: rwkv6.init_rwkv_block(k, cfg), keys[3], cfg.n_layers)
+    elif cfg.family == "hybrid":
+        params["layers"] = _stacked(
+            lambda k: mamba2.init_mamba_block(k, cfg), keys[3], cfg.n_layers)
+        params["shared_attn"] = init_dense_block(keys[5], cfg)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# --------------------------- cache init -------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """KV/state caches, stacked along the scanned-layer axis."""
+    hd, KV = cfg.resolved_head_dim, cfg.n_kv_heads
+    if cfg.family in ("dense", "vlm", "audio"):
+        return {"k": jnp.zeros((cfg.n_layers, batch, max_len, KV, hd), dtype),
+                "v": jnp.zeros((cfg.n_layers, batch, max_len, KV, hd), dtype)}
+    if cfg.family == "moe":
+        fk = cfg.moe.first_k_dense
+        c = {"k": jnp.zeros((cfg.n_layers - fk, batch, max_len, KV, hd),
+                            dtype),
+             "v": jnp.zeros((cfg.n_layers - fk, batch, max_len, KV, hd),
+                            dtype)}
+        if fk:
+            c["dense_k"] = jnp.zeros((fk, batch, max_len, KV, hd), dtype)
+            c["dense_v"] = jnp.zeros((fk, batch, max_len, KV, hd), dtype)
+        return c
+    if cfg.family == "rwkv":
+        H = cfg.d_model // cfg.rwkv.head_dim
+        K = cfg.rwkv.head_dim
+        L = cfg.n_layers
+        return {"shift_tm": jnp.zeros((L, batch, cfg.d_model), dtype),
+                "shift_cm": jnp.zeros((L, batch, cfg.d_model), dtype),
+                "wkv": jnp.zeros((L, batch, H, K, K), jnp.float32)}
+    if cfg.family == "hybrid":
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        H = d_in // s.head_dim
+        conv_ch = d_in + 2 * s.d_state
+        L = cfg.n_layers
+        n_attn = cfg.n_layers // cfg.attn_every
+        return {
+            "conv": jnp.zeros((L, batch, s.d_conv - 1, conv_ch), dtype),
+            "ssd": jnp.zeros((L, batch, H, s.d_state, s.head_dim),
+                             jnp.float32),
+            "k": jnp.zeros((n_attn, batch, max_len, KV, hd), dtype),
+            "v": jnp.zeros((n_attn, batch, max_len, KV, hd), dtype),
+        }
+    raise ValueError(cfg.family)
+
+
+# --------------------------- forward ----------------------------------------
+
+def _layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer sliding-window sizes (gemma2 alternation)."""
+    if cfg.local_global and cfg.sliding_window:
+        w = [cfg.sliding_window if i % 2 == 0 else GLOBAL_WINDOW
+             for i in range(cfg.n_layers)]
+    elif cfg.sliding_window:
+        w = [cfg.sliding_window] * cfg.n_layers
+    else:
+        w = [GLOBAL_WINDOW] * cfg.n_layers
+    return jnp.asarray(w, jnp.int32)
+
+
+def _remat(body, remat):
+    """remat=True: full recompute; remat="dots": save GEMM outputs and
+    recompute only the cheap elementwise chain (selective checkpointing)."""
+    if remat == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_saveable)
+    if remat:
+        return jax.checkpoint(body)
+    return body
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "remat", "mesh", "dp_axes",
+                     "prefix_len_static"))
+def forward(params, tokens, cfg: ModelConfig, *,
+            positions=None, cache=None, cache_index=None,
+            frontend_inputs=None, remat=False,
+            mesh=None, dp_axes: tuple = (),
+            prefix_len_static: Optional[int] = None):
+    """Returns (logits, aux_metrics, new_cache).
+
+    tokens: [B, L] int32 — or [B, n_codebooks, L] for the audio family.
+    frontend_inputs: [B, vision_tokens, d_vision] for the vlm family.
+    cache/cache_index: decode mode (L is typically 1).
+    """
+    aux = {"moe_aux": jnp.float32(0.0), "moe_dropped": jnp.float32(0.0)}
+
+    # ---- embed ----
+    if cfg.family == "audio":
+        B, nq, L = tokens.shape
+        offs = (jnp.arange(nq, dtype=jnp.int32) * cfg.vocab_size)[None, :,
+                                                                  None]
+        x = Lyr.embed(params["embed"], tokens + offs)
+        x = x.sum(axis=1)                                   # [B, L, D]
+    else:
+        B, L = tokens.shape
+        x = Lyr.embed(params["embed"], tokens,
+                      scale_by_sqrt_d=cfg.embed_scale)
+
+    prefix_len = None
+    if cfg.family == "vlm" and frontend_inputs is not None:
+        vis = (frontend_inputs.astype(Lyr.COMPUTE_DTYPE)
+               @ params["vision_proj"].astype(Lyr.COMPUTE_DTYPE))
+        x = jnp.concatenate([vis, x], axis=1)
+        L = x.shape[1]
+        prefix_len = cfg.vision_tokens
+    elif prefix_len_static is not None:
+        prefix_len = prefix_len_static
+
+    if positions is None:
+        if cache_index is not None:
+            positions = cache_index + jnp.arange(L, dtype=jnp.int32)
+        else:
+            positions = jnp.arange(L, dtype=jnp.int32)
+
+    new_cache = dict(cache) if cache is not None else None
+
+    # ---- layer stacks ----
+    if cfg.family in ("dense", "vlm", "audio"):
+        windows = _layer_windows(cfg)
+
+        def body(x, xs):
+            lp, win, ck, cv = xs
+            c = None if ck is None else {"k": ck, "v": cv}
+            y, nc = dense_block(lp, x, cfg, positions, win, cache=c,
+                                cache_index=cache_index,
+                                prefix_len=prefix_len)
+            return y, (None if nc is None else (nc["k"], nc["v"]))
+
+        body = _remat(body, remat)
+        if cache is None:
+            x, _ = lax.scan(body, x, (params["layers"], windows, None, None))
+        else:
+            x, kv = lax.scan(body, x,
+                             (params["layers"], windows, cache["k"],
+                              cache["v"]))
+            new_cache["k"], new_cache["v"] = kv
+
+    elif cfg.family == "moe":
+        fk = cfg.moe.first_k_dense
+        for i in range(fk):
+            lp = jax.tree.map(lambda a: a[i], params["dense_layers"])
+            c = (None if cache is None else
+                 {"k": cache["dense_k"][i], "v": cache["dense_v"][i]})
+            x, nc = dense_block(lp, x, cfg, positions, GLOBAL_WINDOW,
+                                cache=c, cache_index=cache_index)
+            if nc is not None:
+                new_cache["dense_k"] = new_cache["dense_k"].at[i].set(
+                    nc["k"])
+                new_cache["dense_v"] = new_cache["dense_v"].at[i].set(
+                    nc["v"])
+
+        def body(carry, xs):
+            x, aux_s, drop_s = carry
+            lp, ck, cv = xs
+            c = None if ck is None else {"k": ck, "v": cv}
+            y, nc, a, d = moe_block(lp, x, cfg, positions, cache=c,
+                                    cache_index=cache_index,
+                                    mesh=mesh, dp_axes=dp_axes)
+            return ((y, aux_s + a, drop_s + d),
+                    None if nc is None else (nc["k"], nc["v"]))
+
+        if remat:
+            body = jax.checkpoint(body)
+        zero = jnp.float32(0.0)
+        if cache is None:
+            (x, aux_sum, drop_sum), _ = lax.scan(
+                body, (x, zero, zero), (params["layers"], None, None))
+        else:
+            (x, aux_sum, drop_sum), kv = lax.scan(
+                body, (x, zero, zero),
+                (params["layers"], cache["k"], cache["v"]))
+            new_cache["k"], new_cache["v"] = kv
+        n_moe = cfg.n_layers - fk
+        aux["moe_aux"] = aux_sum / n_moe
+        aux["moe_dropped"] = drop_sum / n_moe
+
+    elif cfg.family == "rwkv":
+        def body(x, xs):
+            lp, stm, scm, wkv = xs
+            st = (None if stm is None else
+                  {"shift_tm": stm, "shift_cm": scm, "wkv": wkv})
+            y, ns = rwkv6.rwkv_block(lp, x, cfg, st)
+            return y, (ns["shift_tm"], ns["shift_cm"], ns["wkv"])
+
+        body = _remat(body, remat)
+        if cache is None:
+            x, _ = lax.scan(body, x, (params["layers"], None, None, None))
+        else:
+            x, st = lax.scan(body, x,
+                             (params["layers"], cache["shift_tm"],
+                              cache["shift_cm"], cache["wkv"]))
+            (new_cache["shift_tm"], new_cache["shift_cm"],
+             new_cache["wkv"]) = st
+
+    elif cfg.family == "hybrid":
+        k_every = cfg.attn_every
+        n_groups = cfg.n_layers // k_every
+        rem = cfg.n_layers - n_groups * k_every
+        n_main = n_groups * k_every
+        main = jax.tree.map(
+            lambda a: a[:n_main].reshape(n_groups, k_every, *a.shape[1:]),
+            params["layers"])
+
+        def mamba_body(x, xs):
+            lp, cst, sst = xs
+            st = (None if cst is None else {"conv": cst, "ssd": sst})
+            y, ns = mamba2.mamba_block(lp, x, cfg, st)
+            return y, (ns["conv"], ns["ssd"])
+
+        mamba_body = _remat(mamba_body, remat)
+
+        def group_body(x, xs):
+            gp, cst, sst, ck, cv = xs
+            x, (ncst, nsst) = lax.scan(mamba_body, x, (gp, cst, sst))
+            c = None if ck is None else {"k": ck, "v": cv}
+            x, nc = dense_block(params["shared_attn"], x, cfg, positions,
+                                GLOBAL_WINDOW, cache=c,
+                                cache_index=cache_index)
+            kv = None if nc is None else (nc["k"], nc["v"])
+            return x, (ncst, nsst, kv)
+
+        if cache is None:
+            x, _ = lax.scan(group_body, x, (main, None, None, None, None))
+            for li in range(n_main, cfg.n_layers):
+                lp = jax.tree.map(lambda a: a[li], params["layers"])
+                x, _ = mamba2.mamba_block(lp, x, cfg, None)
+        else:
+            rs = lambda a: a[:n_main].reshape(n_groups, k_every,
+                                              *a.shape[1:])
+            x, (ncst, nsst, kv) = lax.scan(
+                group_body, x,
+                (main, rs(cache["conv"]), rs(cache["ssd"]),
+                 cache["k"], cache["v"]))
+            new_cache["conv"] = jnp.concatenate(
+                [ncst.reshape(n_main, *ncst.shape[2:]),
+                 cache["conv"][n_main:]], axis=0)
+            new_cache["ssd"] = jnp.concatenate(
+                [nsst.reshape(n_main, *nsst.shape[2:]),
+                 cache["ssd"][n_main:]], axis=0)
+            new_cache["k"], new_cache["v"] = kv
+            for li in range(n_main, cfg.n_layers):
+                lp = jax.tree.map(lambda a: a[li], params["layers"])
+                st = {"conv": cache["conv"][li], "ssd": cache["ssd"][li]}
+                x, ns = mamba2.mamba_block(lp, x, cfg, st)
+                new_cache["conv"] = new_cache["conv"].at[li].set(ns["conv"])
+                new_cache["ssd"] = new_cache["ssd"].at[li].set(ns["ssd"])
+    else:
+        raise ValueError(cfg.family)
+
+    # ---- head ----
+    x = Lyr.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    if cfg.family == "audio":
+        logits = Lyr.unembed({"table": head["table"]}, x,
+                             final_softcap=cfg.final_softcap)
+        Lq = logits.shape[1]
+        logits = logits.reshape(B, Lq, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        logits = Lyr.unembed({"table": head["table"]}, x,
+                             final_softcap=cfg.final_softcap)
+        if cfg.family == "vlm" and frontend_inputs is not None:
+            logits = logits[:, cfg.vision_tokens:]
+    return logits, aux, new_cache
+
+
+def lm_loss(logits, labels, mask=None):
+    """Cross entropy; labels [B, L] (or [B, nq, L] for the audio family)."""
+    if logits.ndim == 4:       # audio: [B, L, nq, V], labels [B, nq, L]
+        labels = jnp.moveaxis(labels, 1, 2)
+        if mask is not None and mask.ndim == 3:
+            mask = jnp.moveaxis(mask, 1, 2)
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        mask = jnp.ones(ll.shape, jnp.float32)
+    else:
+        while mask.ndim < ll.ndim:
+            mask = mask[..., None]
+        mask = jnp.broadcast_to(mask, ll.shape).astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,85 @@
+"""Error-feedback gradient compression for the DP all-reduce.
+
+Two compressors, both with error feedback (the residual between the true and
+the compressed gradient is carried in optimizer-side state and added back the
+next step, preserving convergence):
+
+  int8   — per-leaf symmetric quantization: the all-reduce moves 1/4 the
+           bytes (int8 payload + one f32 scale per leaf).
+  topk   — per-leaf magnitude top-k (k = ratio * size): the all-reduce moves
+           values+indices of the k survivors.
+
+On a real pod these wrap ``psum``; under GSPMD the compressed representation
+is what crosses the 'data' axis.  Here the transform is expressed as
+compress -> (all-reduce) -> decompress so the collective payload in the HLO
+is the compressed tensor.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quantize_int8(g):
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_int8(grads, ef_state):
+    """Returns (payload pytree to all-reduce, new residuals)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = _quantize_int8(g32)
+        deq = _dequantize_int8(q, s)
+        return (q, s), g32 - deq
+    flat = jax.tree.map(one, grads, ef_state,
+                        is_leaf=lambda x: isinstance(x, jnp.ndarray))
+    payload = jax.tree.map(lambda t: t[0], flat,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    resid = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return payload, resid
+
+
+def decompress_int8(payload):
+    return jax.tree.map(lambda t: _dequantize_int8(*t), payload,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def compress_topk(grads, ef_state, ratio: float = 0.05):
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        flatg = g32.reshape(-1)
+        k = max(1, int(flatg.shape[0] * ratio))
+        vals, idx = jax.lax.top_k(jnp.abs(flatg), k)
+        kept = flatg[idx]
+        sparse = jnp.zeros_like(flatg).at[idx].set(kept)
+        return (kept, idx.astype(jnp.int32), flatg.shape[0]), \
+            (flatg - sparse).reshape(g.shape)
+    flat = jax.tree.map(one, grads, ef_state,
+                        is_leaf=lambda x: isinstance(x, jnp.ndarray))
+    payload = jax.tree.map(lambda t: t[0], flat,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    resid = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return payload, resid
+
+
+def decompress_topk(payload, shapes):
+    def one(t, shape):
+        kept, idx, n = t
+        return jnp.zeros((n,), jnp.float32).at[idx].set(kept).reshape(shape)
+    return jax.tree.map(one, payload, shapes,
+                        is_leaf=lambda x: isinstance(x, tuple))

@@ -1,0 +1,70 @@
+"""The jit-compiled training step: loss -> grads -> clip -> AdamW.
+
+This is the function the multi-pod dry-run lowers and compiles for every
+(arch x train shape x mesh) cell; buffers are donated so the compiled
+memory picture is the steady-state one.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               clip_by_global_norm)
+from repro.optim.schedule import cosine_schedule
+from repro.utils.tree import pytree_dataclass
+
+
+@pytree_dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+
+
+def make_train_state(key, cfg: ModelConfig, ep_degree: int = 1) -> TrainState:
+    params = tf.init_model(key, cfg, ep_degree=ep_degree)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def train_step(state: TrainState, tokens, labels, cfg: ModelConfig, *,
+               frontend_inputs=None, mesh=None, dp_axes: tuple = (),
+               peak_lr: float = 3e-4, warmup: int = 200,
+               total_steps: int = 10_000, grad_clip: float = 1.0,
+               remat=True):
+    """One optimizer step; returns (new_state, metrics)."""
+
+    def loss_fn(params):
+        logits, aux, _ = tf.forward(
+            params, tokens, cfg, frontend_inputs=frontend_inputs,
+            remat=remat, mesh=mesh, dp_axes=dp_axes)
+        mask = (labels >= 0).astype(jnp.float32)
+        loss = tf.lm_loss(logits, jnp.maximum(labels, 0), mask)
+        if cfg.moe is not None:
+            loss = loss + cfg.moe.router_aux_weight * aux["moe_aux"]
+        return loss, aux
+
+    (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        state.params)
+    grads, gnorm = clip_by_global_norm(grads, grad_clip)
+    lr = cosine_schedule(state.opt.step, warmup, total_steps, peak_lr)
+    new_params, new_opt = adamw_update(grads, state.opt, state.params, lr=lr)
+    metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+               "moe_aux": aux["moe_aux"], "moe_dropped": aux["moe_dropped"]}
+    return TrainState(params=new_params, opt=new_opt), metrics
+
+
+def make_jitted_train_step(cfg: ModelConfig, mesh=None, dp_axes: tuple = (),
+                           in_shardings=None, out_shardings=None, **kw):
+    fn = functools.partial(train_step, cfg=cfg, mesh=mesh, dp_axes=dp_axes,
+                           **kw)
+
+    def wrapper(state, tokens, labels, frontend_inputs=None):
+        return fn(state, tokens, labels, frontend_inputs=frontend_inputs)
+
+    return jax.jit(wrapper, donate_argnums=(0,),
+                   in_shardings=in_shardings, out_shardings=out_shardings)

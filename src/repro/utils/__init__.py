@@ -1,0 +1,4 @@
+from repro.utils.tree import pytree_dataclass, static_field
+from repro.utils.logging import get_logger
+
+__all__ = ["pytree_dataclass", "static_field", "get_logger"]

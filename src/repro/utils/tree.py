@@ -1,0 +1,41 @@
+"""Pytree dataclass utilities (no flax/chex dependency).
+
+``pytree_dataclass`` registers a frozen dataclass as a JAX pytree. Fields
+annotated with ``static_field()`` become aux-data (hashable, not traced).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, TypeVar
+
+import jax
+
+_T = TypeVar("_T")
+
+
+def static_field(**kwargs: Any) -> dataclasses.Field:
+    """A dataclass field treated as static (pytree aux data)."""
+    metadata = dict(kwargs.pop("metadata", {}) or {})
+    metadata["static"] = True
+    return dataclasses.field(metadata=metadata, **kwargs)
+
+
+def pytree_dataclass(cls: type[_T]) -> type[_T]:
+    """Decorator: freeze the dataclass and register it as a pytree node."""
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    data_fields = []
+    meta_fields = []
+    for f in dataclasses.fields(cls):
+        if f.metadata.get("static", False):
+            meta_fields.append(f.name)
+        else:
+            data_fields.append(f.name)
+    jax.tree_util.register_dataclass(
+        cls, data_fields=data_fields, meta_fields=meta_fields
+    )
+
+    def replace(self: _T, **updates: Any) -> _T:
+        return dataclasses.replace(self, **updates)
+
+    cls.replace = replace  # type: ignore[attr-defined]
+    return cls

@@ -1,0 +1,25 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count forcing here — smoke
+tests and benches must see the real (single) device.  Multi-device tests
+spawn subprocesses with their own flags (see test_distributed.py)."""
+import numpy as np
+import pytest
+
+from repro.core.types import DSCParams
+from repro.data.synthetic import ais_like, figure1_scenario
+
+
+@pytest.fixture(scope="session")
+def fig1():
+    batch, labels = figure1_scenario(n_per_route=4, points_per_leg=24, seed=0)
+    return batch, labels
+
+
+@pytest.fixture(scope="session")
+def ais():
+    return ais_like(n_vessels=24, max_points=96, seed=1)
+
+
+@pytest.fixture(scope="session")
+def fig1_params():
+    return DSCParams(eps_sp=0.42, eps_t=1.0, delta_t=0.0, w=6, tau=0.15,
+                     alpha_sigma=-1.0, k_sigma=-1.0, segmentation="tsa2")

@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests: reduced config, one forward + train-ish step
+on CPU, asserting output shapes and no NaNs; plus a decode-vs-prefill
+consistency check per family."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHITECTURES, get_arch, reduced_config
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+
+def _inputs(cfg: ModelConfig, B=2, L=16, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.family == "audio":
+        tokens = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, cfg.n_codebooks, L)),
+            jnp.int32)
+    else:
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, L)),
+                             jnp.int32)
+    fe = None
+    if cfg.family == "vlm":
+        fe = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.vision_tokens, cfg.d_vision)),
+            jnp.float32)
+    return tokens, fe
+
+
+@pytest.mark.parametrize("arch", ARCHITECTURES)
+def test_forward_shapes_and_finite(arch):
+    cfg = reduced_config(get_arch(arch))
+    params = tf.init_model(jax.random.PRNGKey(0), cfg)
+    B, L = 2, 16
+    tokens, fe = _inputs(cfg, B, L)
+    logits, aux, _ = tf.forward(params, tokens, cfg, frontend_inputs=fe)
+    if cfg.family == "audio":
+        assert logits.shape == (B, L, cfg.n_codebooks, cfg.vocab_size)
+    else:
+        assert logits.shape == (B, L, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), arch
+    if cfg.family == "moe":
+        assert float(aux["moe_aux"]) >= 0.0
+
+
+@pytest.mark.parametrize("arch", ARCHITECTURES)
+def test_train_step_decreases_loss(arch):
+    """One SGD step on one batch decreases its own loss (sanity + grads
+    finite)."""
+    cfg = reduced_config(get_arch(arch))
+    params = tf.init_model(jax.random.PRNGKey(1), cfg)
+    B, L = 2, 16
+    tokens, fe = _inputs(cfg, B, L, seed=1)
+    if cfg.family == "audio":
+        labels = tokens
+    else:
+        labels = jnp.roll(tokens, -1, axis=-1)
+
+    def loss_fn(p):
+        logits, aux, _ = tf.forward(p, tokens, cfg, frontend_inputs=fe,
+                                    remat=True)
+        return tf.lm_loss(logits, labels) + 0.01 * aux["moe_aux"]
+
+    l0, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(l0))
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0.0
+    lr = 0.1 / max(float(gnorm), 1.0)
+    params2 = jax.tree.map(
+        lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+    l1 = loss_fn(params2)
+    assert float(l1) < float(l0), (arch, float(l0), float(l1))
+
+
+@pytest.mark.parametrize("arch", ARCHITECTURES)
+def test_decode_matches_prefill(arch):
+    """Last-token logits from (prefill L) == logits from (prefill L-1 +
+    one decode step) — validates every family's cache/state machinery."""
+    cfg = reduced_config(get_arch(arch))
+    params = tf.init_model(jax.random.PRNGKey(2), cfg)
+    B, L = 2, 12
+    tokens, fe = _inputs(cfg, B, L, seed=2)
+
+    full_logits, _, _ = tf.forward(params, tokens, cfg, frontend_inputs=fe)
+
+    max_len = L + (cfg.vision_tokens if cfg.family == "vlm" else 0)
+    cache = tf.init_cache(cfg, B, max_len)
+    head = tokens[..., :L - 1]
+    last = tokens[..., L - 1:]
+    _, _, cache = tf.forward(params, head, cfg, frontend_inputs=fe,
+                             cache=cache, cache_index=jnp.int32(0))
+    prefix = cfg.vision_tokens if cfg.family == "vlm" else 0
+    dec_logits, _, _ = tf.forward(
+        params, last, cfg, cache=cache,
+        cache_index=jnp.int32(prefix + L - 1))
+    a = np.asarray(full_logits)[:, -1]
+    b = np.asarray(dec_logits)[:, -1]
+    np.testing.assert_allclose(a, b, atol=2e-2, rtol=2e-2)
+
+
+def test_moe_kernel_matches_dense_ref():
+    from repro.models.moe import init_moe, moe_ffn, moe_ffn_dense_ref
+    from repro.models.config import MoEConfig
+    cfg = MoEConfig(n_experts=8, top_k=2, d_expert=16, n_shared=1,
+                    capacity_factor=8.0)    # high capacity -> no drops
+    p = init_moe(jax.random.PRNGKey(0), 32, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32), jnp.float32)
+    y, aux, dropped = moe_ffn(p, x, cfg)
+    yref = moe_ffn_dense_ref(p, x, cfg)
+    assert float(dropped) == 0.0
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yref, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_param_counts_are_in_published_ballpark():
+    """Analytic parameter counts land near the published model sizes."""
+    expected = {
+        "deepseek-7b": (6.0e9, 8.0e9),
+        "smollm-360m": (3.0e8, 4.5e8),
+        "gemma2-2b": (2.0e9, 3.3e9),
+        "yi-6b": (5.5e9, 7.0e9),
+        # NOTE: the assignment fixes 48 layers (the published Moonlight-16B
+        # has 27); with 48L x 64e the analytic total is ~28B. The config
+        # follows the assignment verbatim (see DESIGN.md §5).
+        "moonshot-v1-16b-a3b": (26e9, 31e9),
+        "qwen2-moe-a2.7b": (12e9, 16e9),
+        "rwkv6-1.6b": (1.3e9, 2.2e9),
+        "paligemma-3b": (2.0e9, 3.5e9),   # backbone only (frontend stubbed)
+        "zamba2-1.2b": (0.9e9, 1.6e9),
+        "musicgen-large": (1.5e9, 3.5e9),  # gated-MLP variant of the backbone
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_arch(arch).param_count()
+        assert lo <= n <= hi, (arch, n)

@@ -1,0 +1,125 @@
+"""Property tests on Algorithm 4's invariants (hypothesis-driven)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import cluster, rmse, sscr
+from repro.core.refine import refine_states
+from repro.core.types import DSCParams, SubtrajTable
+
+
+def _random_instance(seed, S=24):
+    rng = np.random.default_rng(seed)
+    raw = rng.uniform(0, 1, (S, S)).astype(np.float32)
+    sim = np.maximum(raw, raw.T) * (rng.uniform(0, 1, (S, S)) > 0.5)
+    sim = np.maximum(sim, sim.T)
+    np.fill_diagonal(sim, 0.0)
+    valid = rng.uniform(0, 1, S) > 0.1
+    table = SubtrajTable(
+        t_start=jnp.zeros(S), t_end=jnp.ones(S),
+        voting=jnp.asarray(rng.uniform(0, 5, S).astype(np.float32)),
+        card=jnp.asarray((rng.integers(1, 20, S)).astype(np.int32)),
+        valid=jnp.asarray(valid),
+        traj_row=jnp.arange(S, dtype=jnp.int32))
+    return jnp.asarray(sim), table
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_cluster_invariants(seed):
+    sim, table = _random_instance(seed)
+    params = DSCParams(alpha_sigma=0.0, k_sigma=0.0)
+    res = cluster(sim, table, params)
+    member_of = np.asarray(res.member_of)
+    is_rep = np.asarray(res.is_rep)
+    is_out = np.asarray(res.is_outlier)
+    valid = np.asarray(table.valid)
+    sim_np = np.asarray(sim)
+    alpha = float(res.alpha_used)
+
+    # states partition the valid slots
+    state_count = (is_rep.astype(int)
+                   + ((member_of >= 0) & ~is_rep).astype(int)
+                   + is_out.astype(int))
+    assert (state_count[valid] == 1).all()
+    # invalid slots carry no state
+    assert not is_rep[~valid].any() and not is_out[~valid].any()
+    # representatives point at themselves
+    assert (member_of[is_rep] == np.nonzero(is_rep)[0]).all() if is_rep.any() else True
+    # members meet the alpha similarity floor (Lemma 1 precondition)
+    members = valid & ~is_rep & (member_of >= 0)
+    for s in np.nonzero(members)[0]:
+        assert sim_np[s, member_of[s]] >= alpha - 1e-5
+        assert is_rep[member_of[s]]
+    # voting floor for representatives
+    k = float(res.k_used)
+    voting = np.asarray(table.voting)
+    assert (voting[is_rep] >= k - 1e-5).all()
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_lemma1_bound(seed):
+    """Avg member->rep distance <= eps_sp * (1 - alpha) (Lemma 1)."""
+    sim, table = _random_instance(seed)
+    params = DSCParams(eps_sp=2.0, alpha_sigma=0.0, k_sigma=-1.0)
+    res = cluster(sim, table, params)
+    members = (np.asarray(table.valid) & ~np.asarray(res.is_rep)
+               & (np.asarray(res.member_of) >= 0))
+    alpha = float(res.alpha_used)
+    sim_np = np.asarray(sim)
+    for s in np.nonzero(members)[0]:
+        s_rep = sim_np[s, np.asarray(res.member_of)[s]]
+        d_avg = params.eps_sp * (1.0 - s_rep)      # Lemma 1 inversion
+        assert d_avg <= params.eps_sp * (1.0 - alpha) + 1e-5
+
+
+def test_members_prefer_more_similar_rep():
+    """Reassignment (lines 16-19): member ends at the best-similarity rep
+    among reps that claimed it."""
+    S = 6
+    sim = np.zeros((S, S), np.float32)
+    # slots 0 and 1 are high-voted reps; slot 2 similar to both
+    sim[0, 2] = sim[2, 0] = 0.6
+    sim[1, 2] = sim[2, 1] = 0.9
+    table = SubtrajTable(
+        t_start=jnp.zeros(S), t_end=jnp.ones(S),
+        voting=jnp.asarray([5.0, 4.0, 1.0, 0.0, 0.0, 0.0]),
+        card=jnp.ones(S, jnp.int32),
+        valid=jnp.asarray([True, True, True, False, False, False]),
+        traj_row=jnp.arange(S, dtype=jnp.int32))
+    params = DSCParams(alpha_abs=0.5, k_abs=2.0)
+    res = cluster(jnp.asarray(sim), table, params)
+    assert bool(res.is_rep[0]) and bool(res.is_rep[1])
+    assert int(res.member_of[2]) == 1          # reassigned to the 0.9 rep
+
+
+def test_refine_case_table():
+    """Algorithm 5: Repr beats member beats outlier; best-sim member wins."""
+    S = 4
+    member_of = jnp.asarray([[0, 0, -1, 3], [0, 1, -1, -1]])
+    member_sim = jnp.asarray([[np.inf, 0.4, 0.0, 0.7],
+                              [np.inf, np.inf, 0.0, 0.0]])
+    is_rep = jnp.asarray([[True, False, False, False],
+                          [True, True, False, False]])
+    valid = jnp.asarray([[True, True, True, True],
+                         [True, True, True, False]])
+    out = refine_states(member_of, member_sim, is_rep, valid,
+                        jnp.float32(0.5), jnp.float32(1.0))
+    # slot 0: rep in both -> rep (case b)
+    assert bool(out.is_rep[0])
+    # slot 1: member in P0, rep in P1 -> rep (case d)
+    assert bool(out.is_rep[1])
+    # slot 2: outlier in both -> outlier once (case a)
+    assert bool(out.is_outlier[2])
+    # slot 3: member in P0 only (case f) -> member, not outlier
+    assert int(out.member_of[3]) == 3 and not bool(out.is_outlier[3])
+
+
+def test_sscr_and_rmse_consistency():
+    sim, table = _random_instance(0)
+    params = DSCParams(eps_sp=1.0, alpha_sigma=0.0, k_sigma=0.0)
+    res = cluster(sim, table, params)
+    assert float(sscr(res, sim)) >= 0.0
+    assert 0.0 <= float(rmse(res, sim, params.eps_sp)) <= params.eps_sp

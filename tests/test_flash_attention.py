@@ -1,0 +1,49 @@
+"""Flash attention Pallas kernel vs jnp oracle (shape/feature sweep)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention.ops import HUGE, flash_attention
+from repro.kernels.attention.ref import flash_attention_ref
+
+
+def _qkv(seed, B=2, Lq=32, M=32, KV=2, G=3, hd=16):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(0, 1, (B, Lq, KV, G, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, M, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, M, KV, hd)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("Lq,M,KV,G,hd", [
+    (32, 32, 2, 3, 16), (64, 64, 1, 8, 32), (16, 64, 4, 1, 8)])
+def test_flash_matches_ref_causal(Lq, M, KV, G, hd):
+    q, k, v = _qkv(0, Lq=Lq, M=M, KV=KV, G=G, hd=hd)
+    qp = jnp.arange(Lq, dtype=jnp.int32)
+    kp = jnp.arange(M, dtype=jnp.int32)
+    got = flash_attention(q, k, v, qp, kp)
+    want = flash_attention_ref(q, k, v, qp, kp, HUGE, 0, HUGE)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_flash_window_prefix_softcap():
+    q, k, v = _qkv(1, Lq=48, M=48)
+    qp = jnp.arange(48, dtype=jnp.int32)
+    kp = jnp.arange(48, dtype=jnp.int32)
+    got = flash_attention(q, k, v, qp, kp, window=8, prefix=12, softcap=30.0)
+    want = flash_attention_ref(q, k, v, qp, kp, 8, 12, HUGE, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_flash_decode_max_kv():
+    """Decode shape: 1 query attending a bounded cache region."""
+    q, k, v = _qkv(2, Lq=1, M=64)
+    qp = jnp.asarray([40], jnp.int32)
+    kp = jnp.arange(64, dtype=jnp.int32)
+    got = flash_attention(q, k, v, qp, kp, max_kv=40)
+    want = flash_attention_ref(q, k, v, qp, kp, HUGE, 0, 40)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)

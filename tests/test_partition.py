@@ -1,0 +1,122 @@
+"""Sharding-rule unit tests: policies, divisibility fallbacks, data specs."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHITECTURES, get_arch
+from repro.distributed import partition
+from repro.models import transformer as tf
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+@pytest.fixture(scope="module")
+def smollm_params():
+    cfg = get_arch("smollm-360m")
+    return cfg, jax.eval_shape(
+        lambda: tf.init_model(jax.random.PRNGKey(0), cfg))
+
+
+def test_tp_respects_divisibility(smollm_params):
+    """15 q-heads and 5 kv-heads don't divide 16 -> attention replicated;
+    mlp (2560) and embeddings (49152) shard."""
+    cfg, params = smollm_params
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    specs = partition.param_specs(params, cfg, mesh, policy="tp")
+    flat = {"/".join(str(getattr(k, "key", k)) for k in path): s
+            for path, s in jax.tree_util.tree_leaves_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))}
+    assert flat["embed/table"] == P("model", None)
+    # stacked layer leaves have the leading scan dim
+    assert all(a is None for a in flat["layers/attn/wq"])   # 15 % 16 != 0
+    assert flat["layers/mlp/wi_gate"] == P(None, None, "model")
+    assert flat["layers/mlp/wo"] == P(None, "model", None)
+
+
+def test_tp_shards_divisible_heads():
+    cfg = get_arch("yi-6b")       # 32 heads, kv=4
+    params = jax.eval_shape(lambda: tf.init_model(jax.random.PRNGKey(0),
+                                                  cfg))
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    specs = partition.param_specs(params, cfg, mesh, policy="tp")
+    flat = {"/".join(str(getattr(k, "key", k)) for k in path): s
+            for path, s in jax.tree_util.tree_leaves_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))}
+    assert flat["layers/attn/wq"] == P(None, None, "model", None)
+    assert all(a is None for a in flat["layers/attn/wk"])   # kv=4 % 16
+    assert flat["layers/attn/wo"] == P(None, "model", None, None)
+
+
+def test_dp_only_replicates_everything(smollm_params):
+    cfg, params = smollm_params
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    specs = partition.param_specs(params, cfg, mesh, policy="dp_only")
+    for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        assert all(a is None for a in s)
+
+
+def test_dp_fsdp_shards_every_large_leaf(smollm_params):
+    cfg, params = smollm_params
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    specs = partition.param_specs(params, cfg, mesh, policy="dp_fsdp")
+    rep = partition.report_sharding(params, specs)
+    assert rep["replicated_frac"] < 0.02
+
+
+def test_moe_expert_sharding():
+    cfg = get_arch("qwen2-moe-a2.7b")
+    params = jax.eval_shape(
+        lambda: tf.init_model(jax.random.PRNGKey(0), cfg, ep_degree=16))
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    specs = partition.param_specs(params, cfg, mesh, policy="tp")
+    flat = {"/".join(str(getattr(k, "key", k)) for k in path): s
+            for path, s in jax.tree_util.tree_leaves_with_path(
+                specs, is_leaf=lambda x: isinstance(x, P))}
+    assert flat["layers/moe/w_gate"] == P(None, "model", None, None)
+    assert all(a is None for a in flat["layers/moe/router"])
+
+
+@pytest.mark.parametrize("arch", ARCHITECTURES)
+def test_all_archs_have_consistent_specs(arch):
+    """Every spec's sharded dims divide the axis sizes (GSPMD requirement)."""
+    cfg = get_arch(arch)
+    params = jax.eval_shape(
+        lambda: tf.init_model(jax.random.PRNGKey(0), cfg, ep_degree=16))
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    specs = partition.param_specs(params, cfg, mesh, policy="tp")
+    for (path, leaf), spec in zip(
+            jax.tree_util.tree_leaves_with_path(params),
+            jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert leaf.shape[dim] % size == 0, (arch, path, spec,
+                                                 leaf.shape)
+
+
+def test_decode_data_specs_long_context():
+    """long_500k decode (B=1): cache sequence axis sharded over 'data'."""
+    cfg = get_arch("gemma2-2b")
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    specs = partition.data_specs(cfg, mesh, kind="decode", global_batch=1,
+                                 seq_len=524_288)
+    assert specs["cache"]["k"][2] == "data"
+    # kv=4 indivisible by 16 -> head axis replicated
+    assert specs["cache"]["k"][3] is None
+
+
+def test_decode_data_specs_batched():
+    cfg = get_arch("deepseek-7b")
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    specs = partition.data_specs(cfg, mesh, kind="decode", global_batch=128,
+                                 seq_len=32_768)
+    assert specs["cache"]["k"][1] == ("data",) or \
+        specs["cache"]["k"][1] == "data"
+    assert specs["cache"]["k"][3] == "model"          # kv=32 divides 16

@@ -1,0 +1,100 @@
+"""TSA1/TSA2 property tests: valid partitions, step-change detection."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.segmentation import tsa1, tsa2
+from repro.core.voting import neighbor_mask_packed
+from repro.core.types import JoinResult
+
+
+def test_tsa1_detects_step_change():
+    """A clean step in the voting signal yields exactly one interior cut at
+    the step position."""
+    M, w = 64, 6
+    sig = np.concatenate([np.ones(32), 0.2 * np.ones(32)])[None, :]
+    valid = np.ones((1, M), bool)
+    seg = tsa1(jnp.asarray(sig, jnp.float32), jnp.asarray(valid), w, 0.3, 8)
+    cuts = np.nonzero(np.asarray(seg.cut)[0])[0]
+    assert list(cuts[:1]) == [0]
+    interior = [c for c in cuts if c > 0]
+    assert len(interior) == 1 and abs(interior[0] - 32) <= 1
+    assert int(seg.num_subs[0]) == 2
+
+
+def test_tsa1_flat_signal_no_cuts():
+    M, w = 64, 6
+    sig = 0.7 * np.ones((1, M))
+    valid = np.ones((1, M), bool)
+    seg = tsa1(jnp.asarray(sig, jnp.float32), jnp.asarray(valid), w, 0.2, 8)
+    assert int(seg.num_subs[0]) == 1
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_tsa1_partition_validity(seed):
+    """Subtrajectory labels are a monotone non-decreasing partition of the
+    valid prefix; padding labelled -1; num_subs consistent."""
+    rng = np.random.default_rng(seed)
+    T, M, w = 3, 48, 5
+    sig = rng.uniform(0, 1, (T, M)).astype(np.float32)
+    count = rng.integers(10, M + 1, T)
+    valid = np.arange(M)[None, :] < count[:, None]
+    seg = tsa1(jnp.asarray(sig), jnp.asarray(valid), w, 0.25, 8)
+    sl = np.asarray(seg.sub_local)
+    for r in range(T):
+        labs = sl[r][valid[r]]
+        assert labs[0] == 0
+        assert (np.diff(labs) >= 0).all() and (np.diff(labs) <= 1).all()
+        assert (sl[r][~valid[r]] == -1).all()
+        assert int(seg.num_subs[r]) == labs.max() + 1
+
+
+def test_tsa2_detects_composition_change():
+    """Neighbor set flips completely at midpoint with constant density ->
+    TSA2 cuts, TSA1 does not (Example 2)."""
+    T, M, C = 1, 64, 64
+    w = 6
+    best_w = np.zeros((T, M, C), np.float32)
+    best_w[0, :32, :8] = 0.9       # first half: neighbors 0..7
+    best_w[0, 32:, 8:16] = 0.9     # second half: neighbors 8..15
+    join = JoinResult(best_w=jnp.asarray(best_w),
+                      best_idx=jnp.zeros((T, M, C), jnp.int32))
+    masks = neighbor_mask_packed(join)
+    valid = jnp.ones((T, M), bool)
+    seg2 = tsa2(masks, valid, w, 0.4, 8)
+    assert int(seg2.num_subs[0]) == 2
+    cuts = np.nonzero(np.asarray(seg2.cut)[0])[0]
+    assert abs([c for c in cuts if c > 0][0] - 32) <= 1
+    # density signal is flat -> TSA1 sees nothing
+    vote = jnp.asarray(best_w.sum(-1) / best_w.sum(-1).max())
+    seg1 = tsa1(vote, valid, w, 0.4, 8)
+    assert int(seg1.num_subs[0]) == 1
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_tsa2_partition_validity(seed):
+    rng = np.random.default_rng(seed)
+    T, M, W, w = 2, 40, 2, 4
+    masks = jnp.asarray(rng.integers(0, 2 ** 31, (T, M, W)).astype(np.uint32))
+    count = rng.integers(12, M + 1, T)
+    valid = jnp.asarray(np.arange(M)[None, :] < count[:, None])
+    seg = tsa2(masks, valid, w, 0.3, 8)
+    sl = np.asarray(seg.sub_local)
+    v = np.asarray(valid)
+    for r in range(T):
+        labs = sl[r][v[r]]
+        assert labs[0] == 0
+        assert (np.diff(labs) >= 0).all() and (np.diff(labs) <= 1).all()
+
+
+def test_max_subs_clipping():
+    """Pathological signal with many steps respects max_subtrajs_per_traj."""
+    M, w = 128, 3
+    sig = (np.arange(M) // 8 % 2).astype(np.float32)[None, :]
+    valid = np.ones((1, M), bool)
+    seg = tsa1(jnp.asarray(sig), jnp.asarray(valid), w, 0.1, 4)
+    assert int(seg.num_subs[0]) <= 4
+    assert np.asarray(seg.sub_local).max() <= 3
