@@ -3,8 +3,18 @@
 On CPU, interpret mode measures correctness-path overhead, not TPU speed —
 the derived column therefore reports work sizes (points x candidates, DP
 cells) so TPU projections can be made from the roofline constants.
+
+The dense-vs-pruned stjoin comparison additionally writes
+``BENCH_stjoin.json`` (candidate-tile counts, pruning ratio, wall-clock,
+bit-parity) so CI can accumulate the perf trajectory as an artifact.
+``--smoke`` shrinks every shape for a sub-minute CI run; ``--out-dir``
+redirects the JSON.
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
 
 import numpy as np
 import jax.numpy as jnp
@@ -17,11 +27,80 @@ from repro.kernels.jaccard.ops import window_jaccard
 from repro.kernels.jaccard.ref import jaccard_ref
 from repro.kernels.lcss.ops import lcss_scores
 from repro.kernels.lcss.ref import lcss_ref
-from repro.kernels.stjoin.ops import best_match_join_kernel
+from repro.kernels.stjoin.ops import (
+    best_match_join_kernel,
+    best_match_join_pruned,
+)
 
 
-def run():
-    batch, _ = ais_like(n_vessels=32, max_points=64, seed=1)
+def _clustered_workload(smoke: bool):
+    """Lane-clustered AIS traffic, rows sorted by lane so candidate tiles
+    (groups of ``bc`` adjacent rows) stay spatially tight — the regime the
+    index is built for."""
+    n_vessels, max_points = (16, 32) if smoke else (64, 64)
+    batch, labels = ais_like(n_vessels=n_vessels, n_lanes=8,
+                             max_points=max_points, area=100.0,
+                             lane_width=0.5, seed=1)
+    order = np.argsort(labels, kind="stable")
+    batch = TrajectoryBatch(
+        x=batch.x[order], y=batch.y[order], t=batch.t[order],
+        valid=batch.valid[order],
+        traj_id=batch.traj_id[order])
+    return batch
+
+
+def bench_stjoin_pruned(smoke: bool = False, out_dir: str = ".") -> dict:
+    """Dense vs index-pruned stjoin: tiles, wall-clock, bit-parity."""
+    batch = _clustered_workload(smoke)
+    eps_sp, eps_t = 3.0, 600.0
+    bp, bc, bm = (32, 2, 32) if smoke else (64, 2, 64)
+
+    kw = dict(bp=bp, bc=bc, bm=bm)
+    d_secs, dense = time_fn(best_match_join_kernel, batch, batch,
+                            eps_sp, eps_t, iters=2, **kw)
+    p_secs, out = time_fn(best_match_join_pruned, batch, batch,
+                          eps_sp, eps_t, iters=2, return_stats=True, **kw)
+    pruned, stats = out
+
+    parity = (np.array_equal(np.asarray(dense.best_w),
+                             np.asarray(pruned.best_w))
+              and np.array_equal(np.asarray(dense.best_idx),
+                                 np.asarray(pruned.best_idx)))
+    kept = int(stats.kept_tiles)
+    rec = {
+        "workload": "ais_like clustered (lane-sorted rows)",
+        "smoke": bool(smoke),
+        "shape": {"T": batch.num_trajs, "M": batch.max_points,
+                  "bp": bp, "bc": bc, "bm": bm},
+        "eps_sp": eps_sp, "eps_t": eps_t,
+        "dense_tiles": stats.dense_tiles,
+        "pruned_tiles": kept,
+        "pruning_ratio": 1.0 - kept / max(stats.dense_tiles, 1),
+        "max_tiles_per_ref_block": int(stats.max_per_ref),
+        "dense_us": d_secs * 1e6,
+        "pruned_us": p_secs * 1e6,
+        "bit_identical": bool(parity),
+    }
+    csv_row("stjoin_dense", rec["dense_us"],
+            f"tiles={rec['dense_tiles']}")
+    csv_row("stjoin_pruned", rec["pruned_us"],
+            f"tiles={kept};ratio={rec['pruning_ratio']:.3f};"
+            f"parity={parity}")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "BENCH_stjoin.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2)
+    assert parity, "pruned join diverged from dense join"
+    assert kept < rec["dense_tiles"], \
+        "index pruned nothing on the clustered workload"
+    return rec
+
+
+def run(smoke: bool = False, out_dir: str = "."):
+    if smoke:
+        batch, _ = ais_like(n_vessels=8, max_points=32, seed=1)
+    else:
+        batch, _ = ais_like(n_vessels=32, max_points=64, seed=1)
     eps_sp, eps_t = 3.0, 180.0
 
     secs, _ = time_fn(best_match_join, batch, batch, eps_sp, eps_t, iters=2)
@@ -31,8 +110,10 @@ def run():
                       iters=2)
     csv_row("stjoin_pallas_interpret", secs * 1e6, f"pairs={work}")
 
+    bench_stjoin_pruned(smoke=smoke, out_dir=out_dir)
+
     rng = np.random.default_rng(0)
-    B, N, M = 8, 64, 64
+    B, N, M = (2, 32, 32) if smoke else (8, 64, 64)
     mk = lambda shape: jnp.asarray(rng.normal(0, 3, shape), jnp.float32)
     rx, ry = mk((B, N)), mk((B, N))
     rt = jnp.asarray(np.sort(rng.uniform(0, 500, (B, N)), 1), jnp.float32)
@@ -46,7 +127,7 @@ def run():
                       2.0, 60.0, iters=2)
     csv_row("lcss_pallas_interpret", secs * 1e6, f"dp_cells={B*N*M}")
 
-    T, Mm, W, w = 16, 128, 4, 8
+    T, Mm, W, w = (4, 32, 2, 4) if smoke else (16, 128, 4, 8)
     masks = jnp.asarray(rng.integers(0, 2**31, (T, Mm, W)).astype(np.uint32))
     valid = jnp.ones((T, Mm), bool)
     secs, _ = time_fn(jaccard_ref, masks, w, iters=2)
@@ -57,4 +138,10 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for the CI smoke job")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for BENCH_*.json records")
+    ns = ap.parse_args()
+    run(smoke=ns.smoke, out_dir=ns.out_dir)

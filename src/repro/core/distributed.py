@@ -45,6 +45,7 @@ from repro.core.partitioning import PartitionedBatch
 from repro.core.refine import refine_states
 from repro.core.similarity import build_subtraj_table_arrays
 from repro.core.types import ClusteringResult, DSCParams, JoinResult, SubtrajTable
+from repro.utils.compat import shard_map as shard_map_compat
 from repro.utils.tree import pytree_dataclass
 
 
@@ -91,7 +92,11 @@ def run_dsc_distributed(
     use_kernel: bool = False,
     **kw,
 ) -> DistributedDSCOutput:
-    """Compile & run the full distributed pipeline on ``mesh``."""
+    """Compile & run the full distributed pipeline on ``mesh``.
+
+    Forwards ``use_index=True`` (see ``build_dsc_program``) to prune the
+    JOIN phase with the spatiotemporal index.
+    """
     fn = build_dsc_program(parts, params, mesh, part_axis=part_axis,
                            model_axis=model_axis, use_kernel=use_kernel,
                            **kw)
@@ -118,6 +123,7 @@ def build_dsc_program(
     part_axis: str = "part",
     model_axis: str = "model",
     use_kernel: bool = False,
+    use_index: bool = False,
     sim_strategy: str = "psum",     # "psum" | "allgather" (column-sharded)
     sim_dtype: str = "f32",         # "f32" | "bf16" collective payload
 ):
@@ -127,7 +133,17 @@ def build_dsc_program(
     targets only ITS candidate-column block of the SP matrix: instead of a
     dense [S, S] psum (2x bytes, 16x memory), each rank all_gathers its
     [S, S/m] block — the §Perf optimization for the DSC cells.
-    ``sim_dtype="bf16"`` additionally halves the payload."""
+    ``sim_dtype="bf16"`` additionally halves the payload.
+
+    ``use_index=True`` turns on the spatiotemporal candidate-pruning index
+    (``repro.index.grid``) in the JOIN phase: partitions first exchange
+    their eps-expanded bounding boxes (6 floats) and tighten the validity
+    mask of the slab they ship to each neighbor down to the points that
+    neighbor can actually match (slab *bytes* are unchanged — fixed
+    shapes — but out-of-reach points never enter the join or any
+    downstream reduction), and the jnp join path additionally skips
+    (ref row, cand row) pairs whose bboxes are provably farther than eps
+    apart.  Both filters are conservative, so results are unchanged."""
     nP = mesh.shape[part_axis]
     nM = mesh.shape[model_axis]
     Pn, T, Mp = parts.x.shape
@@ -153,7 +169,33 @@ def build_dsc_program(
         lx, rx = halo(px)
         ly, ry = halo(py)
         lt, rt = halo(pt)
-        lv, rv = halo(pv)
+        if use_index:
+            # index-pruned halo: exchange eps-expanded partition bboxes
+            # (6 floats) first, then ship each neighbor only the bucket of
+            # points it can actually match (conservative -> same result).
+            inf = jnp.float32(jnp.inf)
+            own_box = jnp.stack([
+                jnp.min(jnp.where(pv, px, inf)),
+                jnp.max(jnp.where(pv, px, -inf)),
+                jnp.min(jnp.where(pv, py, inf)),
+                jnp.max(jnp.where(pv, py, -inf)),
+                jnp.min(jnp.where(pv, pt, inf)),
+                jnp.max(jnp.where(pv, pt, -inf)),
+            ])
+            box_l = _nbr(own_box, part_axis, +1, nP)   # bbox of rank - 1
+            box_r = _nbr(own_box, part_axis, -1, nP)   # bbox of rank + 1
+            e_sp = jnp.asarray(params.eps_sp, jnp.float32)
+            e_t = jnp.asarray(params.eps_t, jnp.float32)
+
+            def inside(box):
+                return ((px >= box[0] - e_sp) & (px <= box[1] + e_sp)
+                        & (py >= box[2] - e_sp) & (py <= box[3] + e_sp)
+                        & (pt >= box[4] - e_t) & (pt <= box[5] + e_t))
+
+            lv = _nbr(pv & inside(box_r), part_axis, +1, nP)
+            rv = _nbr(pv & inside(box_l), part_axis, -1, nP)
+        else:
+            lv, rv = halo(pv)
         eps_t = jnp.asarray(params.eps_t, jnp.float32)
         lo, hi = rng[0] - eps_t, rng[1] + eps_t
         lv &= (lt >= lo) & (lt <= hi)
@@ -182,11 +224,19 @@ def build_dsc_program(
                 bm=_pick_block(3 * Mp, 128), interpret=default_interpret())
         else:
             from repro.kernels.stjoin.ref import stjoin_ref
+            pair_mask = None
+            if use_index:
+                from repro.index.grid import trajectory_pair_mask
+                pmask = trajectory_pair_mask(
+                    px, py, pt, pv, sl(cx), sl(cy), sl(ct), sl(cv),
+                    params.eps_sp, params.eps_t)           # [T, Tc]
+                pair_mask = jnp.repeat(pmask, Mp, axis=0)  # [T*Mp, Tc]
             bw, bidx = stjoin_ref(
                 px.reshape(-1), py.reshape(-1), pt.reshape(-1),
                 ref_ids, pv.reshape(-1),
                 sl(cx), sl(cy), sl(ct), cid, sl(cv),
-                jnp.asarray(params.eps_sp, jnp.float32), eps_t)
+                jnp.asarray(params.eps_sp, jnp.float32), eps_t,
+                pair_mask=pair_mask)
 
         join = JoinResult(best_w=bw.reshape(T, Mp, Tc),
                           best_idx=bidx.reshape(T, Mp, Tc))
@@ -332,6 +382,5 @@ def build_dsc_program(
     out_specs = (P(), P(), P(part_axis, None, None),
                  P(part_axis, None), P(part_axis, None))
 
-    return jax.shard_map(
-        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False)
+    return shard_map_compat(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)

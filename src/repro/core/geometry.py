@@ -26,12 +26,17 @@ def best_match_join(
     eps_t: float | jnp.ndarray,
     *,
     exclude_same_id: bool = True,
+    prune_mask: jnp.ndarray | None = None,
 ) -> JoinResult:
     """Dense best-match spatiotemporal join (reference implementation).
 
     Returns weight/index tensors of shape ``[T_ref, M_ref, T_cand]``.
     Memory is O(T*M*C) — fine for tests; the distributed pipeline streams
     candidate tiles through the Pallas kernel instead.
+
+    ``prune_mask``: optional [T_ref, T_cand] bool from the spatiotemporal
+    index (``repro.index.grid.trajectory_pair_mask``); pairs masked False
+    are skipped.  A conservative mask leaves the result unchanged.
     """
     # [T, M, 1, 1] vs [1, 1, C, Mc] broadcasting
     dx = ref.x[:, :, None, None] - cand.x[None, None, :, :]
@@ -44,6 +49,8 @@ def best_match_join(
     if exclude_same_id:
         same = ref.traj_id[:, None] == cand.traj_id[None, :]      # [T, C]
         ok &= ~same[:, None, :, None]
+    if prune_mask is not None:
+        ok &= prune_mask[:, None, :, None]
 
     w = jnp.where(ok, 1.0 - d_sp / eps_sp, 0.0)                   # [T, M, C, Mc]
     best_w = jnp.max(w, axis=-1)                                  # [T, M, C]
@@ -98,9 +105,21 @@ def filter_delta_t(join: JoinResult, ref_t: jnp.ndarray,
 
 
 def subtrajectory_join(ref: TrajectoryBatch, cand: TrajectoryBatch,
-                       eps_sp, eps_t, delta_t=0.0) -> JoinResult:
-    """Problem 1, end to end: cylinder join + delta_t run filtering."""
-    j = best_match_join(ref, cand, eps_sp, eps_t)
+                       eps_sp, eps_t, delta_t=0.0, *,
+                       use_index: bool = False) -> JoinResult:
+    """Problem 1, end to end: cylinder join + delta_t run filtering.
+
+    ``use_index=True`` applies the row-level spatiotemporal prune mask
+    (bbox distance test per trajectory pair) before the dense sweep; the
+    mask is conservative, so the output is unchanged.
+    """
+    prune_mask = None
+    if use_index:
+        from repro.index.grid import trajectory_pair_mask
+        prune_mask = trajectory_pair_mask(
+            ref.x, ref.y, ref.t, ref.valid,
+            cand.x, cand.y, cand.t, cand.valid, eps_sp, eps_t)
+    j = best_match_join(ref, cand, eps_sp, eps_t, prune_mask=prune_mask)
     dt = jnp.asarray(delta_t, jnp.float32)
     return jax.lax.cond(
         dt > 0.0, lambda jj: filter_delta_t(jj, ref.t, dt), lambda jj: jj, j)

@@ -149,7 +149,7 @@ def report_sharding(params, specs) -> dict:
     """Bytes sharded vs replicated — surfaces silent replication fallbacks."""
     total = 0
     replicated = 0
-    flat = jax.tree.leaves_with_path(params)
+    flat = jax.tree_util.tree_leaves_with_path(params)
     sflat = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
     for (path, leaf), spec in zip(flat, sflat):
         nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize

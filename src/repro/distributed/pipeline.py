@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.utils.compat import shard_map as shard_map_compat
+
 
 def pipeline_apply(stage_fn: Callable, mesh, *, stage_axis: str = "pod",
                    n_micro: int, data_axes: tuple = ("data",)):
@@ -88,11 +90,11 @@ def pipeline_apply(stage_fn: Callable, mesh, *, stage_axis: str = "pod",
     out_specs = P(dspec)
 
     def wrapped(stage_params, x):
-        fn = jax.shard_map(
+        fn = shard_map_compat(
             body, mesh=mesh,
             in_specs=(jax.tree.map(lambda _: in_specs[0], stage_params),
                       in_specs[1]),
-            out_specs=out_specs, check_vma=False)
+            out_specs=out_specs)
         return fn(stage_params, x)
 
     return wrapped

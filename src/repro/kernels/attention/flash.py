@@ -46,8 +46,11 @@ def _kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, meta_ref, o_ref, *,
 
     def body(i, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.ds(i * bk, bk), slice(None)))  # [bk, hd]
-        v = pl.load(v_ref, (0, pl.ds(i * bk, bk), slice(None)))
+        # jnp scalar (not python int) index: pallas' dynamic-index check
+        # requires every non-slice index to carry a shape
+        zero = jnp.int32(0)
+        k = pl.load(k_ref, (zero, pl.ds(i * bk, bk), slice(None)))  # [bk, hd]
+        v = pl.load(v_ref, (zero, pl.ds(i * bk, bk), slice(None)))
         kpos = pl.load(kpos_ref, (pl.ds(i * bk, bk),))
 
         s = jnp.einsum("qgh,kh->qgk", q, k)                    # [bq, G, bk]

@@ -1,15 +1,29 @@
-"""Public jit'd wrapper: TrajectoryBatch-level subtrajectory join via Pallas."""
+"""Public jit'd wrapper: TrajectoryBatch-level subtrajectory join via Pallas.
+
+Two entry points:
+
+* ``best_match_join_kernel``  — the dense join: every (ref block, cand
+  block) tile is visited.  Fallback and parity oracle.
+* ``best_match_join_pruned``  — index-accelerated join: a spatiotemporal
+  grid over tile bounding boxes (``repro.index.grid``) first emits, per
+  reference block, the compacted list of candidate tiles that can contain
+  a match; only those tiles enter the Pallas kernel.  Output is
+  bit-identical to the dense join (pruning is conservative).
+"""
 from __future__ import annotations
 
 import functools
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.geometry import filter_delta_t
 from repro.core.types import JoinResult, TrajectoryBatch
+from repro.index import grid as gridx
 from repro.kernels import default_interpret
-from repro.kernels.stjoin.stjoin import stjoin_pallas
+from repro.kernels.stjoin.stjoin import stjoin_pallas, stjoin_pallas_pruned
 
 
 def _pad_to(x: jnp.ndarray, mult: int, axis: int, fill):
@@ -52,10 +66,105 @@ def best_match_join_kernel(ref: TrajectoryBatch, cand: TrajectoryBatch,
     return JoinResult(best_w=w, best_idx=idx)
 
 
+def _padded_operands(ref: TrajectoryBatch, cand: TrajectoryBatch,
+                     bp: int, bc: int, bm: int):
+    """The dense wrapper's padding, shared with the pruned path."""
+    T, M = ref.x.shape
+    rx = _pad_to(ref.x.reshape(-1), bp, 0, 0.0)
+    ry = _pad_to(ref.y.reshape(-1), bp, 0, 0.0)
+    rt = _pad_to(ref.t.reshape(-1), bp, 0, 0.0)
+    rok = _pad_to(ref.valid.reshape(-1), bp, 0, False)
+    rid = _pad_to(
+        jnp.broadcast_to(ref.traj_id[:, None], (T, M)).reshape(-1), bp, 0, -1)
+
+    cx = _pad_to(_pad_to(cand.x, bm, 1, 0.0), bc, 0, 0.0)
+    cy = _pad_to(_pad_to(cand.y, bm, 1, 0.0), bc, 0, 0.0)
+    ct = _pad_to(_pad_to(cand.t, bm, 1, 0.0), bc, 0, 0.0)
+    cok = _pad_to(_pad_to(cand.valid, bm, 1, False), bc, 0, False)
+    cid = _pad_to(cand.traj_id, bc, 0, -2)
+    return (rx, ry, rt, rid, rok), (cx, cy, ct, cid, cok)
+
+
+def plan_join_index(ref: TrajectoryBatch, cand: TrajectoryBatch,
+                    eps_sp, eps_t, *, bp=256, bc=8, use_cells: bool = True):
+    """Candidate-tile mask + per-ref-block survivor counts.
+
+    Host-driven (not jitted as a whole: the grid geometry is fitted from
+    the concrete data, and baking it in as a static jit argument would
+    retrace on every new batch).  The array math inside is plain jnp.
+    Returns ``(mask [nRb, nCb] bool, counts [nRb] i32, spec | None)``.
+    """
+    (rx, ry, rt, _, rok), (cx, cy, ct, _, cok) = _padded_operands(
+        ref, cand, bp, bc, 1)
+    rboxes = gridx.point_block_boxes(rx, ry, rt, rok, bp)
+    cboxes = gridx.traj_block_boxes(cx, cy, ct, cok, bc)
+    spec = None
+    if use_cells:
+        spec = gridx.fit_grid(cboxes, float(eps_sp), float(eps_t))
+        table = gridx.build_cell_table(spec, cboxes)
+        mask = gridx.candidate_tile_mask(
+            spec, table, rboxes, cboxes, eps_sp, eps_t)
+    else:
+        mask = gridx.exact_pair_mask(rboxes, cboxes, eps_sp, eps_t)
+    counts = jnp.sum(mask, axis=1).astype(jnp.int32)
+    return mask, counts, spec
+
+
+def best_match_join_pruned(ref: TrajectoryBatch, cand: TrajectoryBatch,
+                           eps_sp, eps_t, *, bp=256, bc=8, bm=128,
+                           max_tiles: int | None = None,
+                           use_cells: bool = True,
+                           interpret: bool | None = None,
+                           return_stats: bool = False):
+    """Index-pruned best-match join; bit-identical to the dense kernel.
+
+    Host-driven planning (concrete inputs required): fits the eps-derived
+    grid, compacts the surviving candidate-tile lists to a static width
+    ``K`` (``max_tiles`` or the observed maximum), then runs the sparse
+    Pallas kernel over only those tiles.  Raises if ``max_tiles`` is too
+    small to keep every survivor, since dropping one would break parity.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    T, M = ref.x.shape
+    C, _ = cand.x.shape
+
+    # planning pass: bboxes only, bm-independent
+    mask, counts, _ = plan_join_index(
+        ref, cand, eps_sp, eps_t, bp=bp, bc=bc, use_cells=use_cells)
+
+    need = gridx.plan_max_tiles(counts)
+    K = max_tiles if max_tiles is not None else need
+    if int(np.max(np.asarray(counts), initial=0)) > K:
+        raise ValueError(
+            f"max_tiles={K} drops candidate tiles (need {need}); "
+            "the pruned join would no longer match the dense join")
+    tile_ids, counts = gridx.compact_candidates(mask, K)
+
+    (rx, ry, rt, rid, rok), (cx, cy, ct, cid, cok) = _padded_operands(
+        ref, cand, bp, bc, bm)
+    w, idx = stjoin_pallas_pruned(
+        rx, ry, rt, rid, rok, cx, cy, ct, cid, cok, tile_ids,
+        eps_sp, eps_t, bp=bp, bc=bc, bm=bm, interpret=interpret)
+    out = JoinResult(best_w=w[:T * M, :C].reshape(T, M, C),
+                     best_idx=idx[:T * M, :C].reshape(T, M, C))
+    if return_stats:
+        return out, gridx.prune_stats(counts, mask.shape[1])
+    return out
+
+
 def subtrajectory_join(ref: TrajectoryBatch, cand: TrajectoryBatch,
-                       eps_sp, eps_t, delta_t=0.0, **kw) -> JoinResult:
-    """Kernel-backed Problem 1 (join + delta_t refine)."""
-    j = best_match_join_kernel(ref, cand, eps_sp, eps_t, **kw)
+                       eps_sp, eps_t, delta_t=0.0, *, use_index: bool = False,
+                       **kw) -> JoinResult:
+    """Kernel-backed Problem 1 (join + delta_t refine).
+
+    ``use_index=True`` routes through the grid-pruned kernel (requires
+    concrete inputs for the host-side planning pass); output is identical.
+    """
+    if use_index:
+        j = best_match_join_pruned(ref, cand, eps_sp, eps_t, **kw)
+    else:
+        j = best_match_join_kernel(ref, cand, eps_sp, eps_t, **kw)
     dt = jnp.asarray(delta_t, jnp.float32)
     return jax.lax.cond(
         dt > 0.0, lambda jj: filter_delta_t(jj, ref.t, dt), lambda jj: jj, j)

@@ -6,8 +6,12 @@ import jax.numpy as jnp
 
 def stjoin_ref(ref_x, ref_y, ref_t, ref_id, ref_ok,
                cand_x, cand_y, cand_t, cand_id, cand_ok,
-               eps_sp, eps_t):
-    """Returns (best_w[P, C] f32, best_idx[P, C] i32)."""
+               eps_sp, eps_t, *, pair_mask=None):
+    """Returns (best_w[P, C] f32, best_idx[P, C] i32).
+
+    ``pair_mask``: optional [P, C] bool candidate-pruning mask from the
+    spatiotemporal index; a conservative mask leaves the output unchanged.
+    """
     dx = ref_x[:, None, None] - cand_x[None, :, :]
     dy = ref_y[:, None, None] - cand_y[None, :, :]
     dt = jnp.abs(ref_t[:, None, None] - cand_t[None, :, :])
@@ -15,6 +19,8 @@ def stjoin_ref(ref_x, ref_y, ref_t, ref_id, ref_ok,
     ok = (d2 <= eps_sp * eps_sp) & (dt <= eps_t)
     ok &= ref_ok[:, None, None] & cand_ok[None, :, :]
     ok &= ref_id[:, None, None] != cand_id[None, :, None]
+    if pair_mask is not None:
+        ok &= pair_mask[:, :, None]
     w = jnp.where(ok, 1.0 - jnp.sqrt(d2) / eps_sp, -1.0)
     best_w = jnp.max(w, axis=-1)
     best_idx = jnp.where(best_w > 0.0,

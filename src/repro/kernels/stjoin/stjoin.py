@@ -94,6 +94,145 @@ def _kernel(ref_x, ref_y, ref_t, ref_id, ref_ok,
     out_idx[...] = jnp.where(better, tile_idx, run_idx)
 
 
+def _pruned_kernel(ref_x, ref_y, ref_t, ref_id, ref_ok,
+                   cand_x, cand_y, cand_t, cand_id, cand_ok,
+                   eps, out_w, out_idx):
+    """Same contraction as ``_kernel`` but over gathered candidate tiles.
+
+    Grid is (ref block i, surviving-tile slot s, cand-point chunk k); the
+    candidate operands were pre-gathered to ``[nRb, K, bc, Mc]`` so the
+    block index map stays static.  The k-axis accumulation is identical to
+    the dense kernel's, which keeps surviving tiles bit-identical.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_w[...] = jnp.zeros_like(out_w)
+        out_idx[...] = jnp.full_like(out_idx, -1)
+
+    eps_sp = eps[0]
+    eps_t = eps[1]
+
+    rx = ref_x[...]                       # [bp]
+    ry = ref_y[...]
+    rt = ref_t[...]
+    rid = ref_id[...]
+    rok = ref_ok[...]
+
+    cx = cand_x[0, 0]                     # [bc, bm]
+    cy = cand_y[0, 0]
+    ct = cand_t[0, 0]
+    cid = cand_id[0, 0]                   # [bc]
+    cok = cand_ok[0, 0]
+
+    bm = cx.shape[-1]
+
+    dx = rx[:, None, None] - cx[None, :, :]          # [bp, bc, bm]
+    dy = ry[:, None, None] - cy[None, :, :]
+    dt = jnp.abs(rt[:, None, None] - ct[None, :, :])
+    d2 = dx * dx + dy * dy
+
+    ok = (d2 <= eps_sp * eps_sp) & (dt <= eps_t)
+    ok &= rok[:, None, None] & cok[None, :, :]
+    ok &= rid[:, None, None] != cid[None, :, None]
+
+    w = jnp.where(ok, 1.0 - jnp.sqrt(d2) / eps_sp, -1.0)  # [bp, bc, bm]
+
+    tile_w = jnp.max(w, axis=-1)                          # [bp, bc]
+    tile_arg = jnp.argmax(w, axis=-1).astype(jnp.int32)
+    tile_idx = jnp.where(tile_w > 0.0, tile_arg + k * bm, -1)
+    tile_w = jnp.maximum(tile_w, 0.0)
+
+    run_w = out_w[0, 0]
+    run_idx = out_idx[0, 0]
+    better = tile_w > run_w
+    out_w[0, 0] = jnp.where(better, tile_w, run_w)
+    out_idx[0, 0] = jnp.where(better, tile_idx, run_idx)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bp", "bc", "bm", "interpret"))
+def stjoin_pallas_pruned(ref_x, ref_y, ref_t, ref_id, ref_ok,
+                         cand_x, cand_y, cand_t, cand_id, cand_ok,
+                         tile_ids, eps_sp, eps_t, *, bp: int = 256,
+                         bc: int = 8, bm: int = 128,
+                         interpret: bool = True):
+    """Sparse-grid join: visit only the surviving (ref block, cand tile)
+    pairs named by ``tile_ids``.
+
+    ``tile_ids``: [nRb, K] int32 — per reference block, the candidate
+    j-block ids (``C // bc`` of them exist) whose bounding boxes intersect
+    the eps-expanded reference-block box, -1 padded, ascending.  Produced
+    by ``repro.index.grid.compact_candidates``.
+
+    Returns dense (best_w [P, C], best_idx [P, C]); entries of pruned
+    tiles are (0, -1) — exactly what the dense kernel yields for them,
+    because pruning is conservative.
+
+    Memory note: the gather materializes the surviving candidate tiles as
+    ``[nRb, K, bc, Mc]`` arrays (duplication factor ~nRb*K/nCb over the
+    raw candidate set), which keeps the block index maps static at the
+    cost of HBM footprint.  The TPU follow-up is a scalar-prefetch grid
+    (``tile_ids`` as a prefetch operand indexing the original [C, Mc]
+    arrays) that removes the duplication; on CPU interpret this is the
+    correctness-path layout.
+    """
+    P = ref_x.shape[0]
+    C, Mc = cand_x.shape
+    nRb = P // bp
+    nCb = C // bc
+    K = tile_ids.shape[1]
+    assert P % bp == 0 and C % bc == 0 and Mc % bm == 0, (P, C, Mc, bp, bc, bm)
+    assert tile_ids.shape[0] == nRb, (tile_ids.shape, nRb)
+
+    live = tile_ids >= 0                                    # [nRb, K]
+    safe = jnp.clip(tile_ids, 0, nCb - 1)
+
+    # gather candidate j-blocks per reference block: [nRb, K, bc, Mc]
+    gather = lambda a: a.reshape(nCb, bc, Mc)[safe]
+    gx, gy, gt = gather(cand_x), gather(cand_y), gather(cand_t)
+    gok = gather(cand_ok.astype(jnp.bool_)) & live[:, :, None, None]
+    gid = cand_id.astype(jnp.int32).reshape(nCb, bc)[safe]  # [nRb, K, bc]
+
+    eps = jnp.stack([jnp.asarray(eps_sp, jnp.float32),
+                     jnp.asarray(eps_t, jnp.float32)])
+
+    grid = (nRb, K, Mc // bm)
+    ref_spec = pl.BlockSpec((bp,), lambda i, s, k: (i,))
+    cand_spec = pl.BlockSpec((1, 1, bc, bm), lambda i, s, k: (i, s, 0, k))
+    cid_spec = pl.BlockSpec((1, 1, bc), lambda i, s, k: (i, s, 0))
+    eps_spec = pl.BlockSpec((2,), lambda i, s, k: (0,))
+    out_spec = pl.BlockSpec((1, 1, bp, bc), lambda i, s, k: (i, s, 0, 0))
+
+    tw, tidx = pl.pallas_call(
+        _pruned_kernel,
+        grid=grid,
+        in_specs=[ref_spec] * 5 + [cand_spec] * 3 + [cid_spec, cand_spec,
+                                                     eps_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((nRb, K, bp, bc), jnp.float32),
+            jax.ShapeDtypeStruct((nRb, K, bp, bc), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ref_x, ref_y, ref_t, ref_id.astype(jnp.int32),
+      ref_ok.astype(jnp.bool_), gx, gy, gt, gid, gok, eps)
+
+    # scatter surviving tiles back to the dense [P, C] layout; each (i, j)
+    # appears at most once in a row of tile_ids, so .set is exact.
+    col = jnp.where(live, safe, nCb)                        # dummy col nCb
+    rows = jnp.arange(nRb, dtype=jnp.int32)[:, None]
+    w = jnp.zeros((nRb, nCb + 1, bp, bc), jnp.float32)
+    idx = jnp.full((nRb, nCb + 1, bp, bc), -1, jnp.int32)
+    w = w.at[rows, col].set(tw, mode="drop")
+    idx = idx.at[rows, col].set(tidx, mode="drop")
+    w = w[:, :nCb].transpose(0, 2, 1, 3).reshape(P, C)
+    idx = idx[:, :nCb].transpose(0, 2, 1, 3).reshape(P, C)
+    return w, idx
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("bp", "bc", "bm", "interpret"))

@@ -42,7 +42,10 @@ _WHILE_RE = re.compile(
 _WHILE_RE2 = re.compile(
     r"while\(.*?\).*?body=%?([\w.\-]+).*?condition=%?([\w.\-]+)")
 _CONST_RE = re.compile(r"constant\((\d+)\)")
-_DOT_ARGS_RE = re.compile(r"\bdot\(\s*%?([\w.\-]+)")
+# lhs operand of a dot, with or without an inline type annotation
+# (scheduled HLO prints "dot(f32[128,256]{1,0} %Arg_0.1, ...)")
+_DOT_ARGS_RE = re.compile(
+    r"\bdot\(\s*(?:(\w+\[[\d,]*\])(?:\{[^}]*\})?\s+)?%?([\w.\-]+)")
 _CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
@@ -159,7 +162,7 @@ def _line_costs(line: str, symbols: dict):
         ma = _DOT_ARGS_RE.search(line)
         contract = 1
         if ma:
-            lhs_type = symbols.get(ma.group(1), "")
+            lhs_type = ma.group(1) or symbols.get(ma.group(2), "")
             lhs_dims = []
             for _, dims in _SHAPE_RE.findall(lhs_type):
                 lhs_dims = _dims(dims)

@@ -38,6 +38,9 @@ def main(argv=None):
                     help="number of temporal partitions (0 = single host)")
     ap.add_argument("--model-par", type=int, default=1)
     ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--use-index", action="store_true",
+                    help="prune the distributed JOIN phase with the "
+                         "spatiotemporal grid index (lossless)")
     ap.add_argument("--segmentation", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -68,7 +71,8 @@ def main(argv=None):
         mesh = jax.make_mesh((P, args.model_par), ("part", "model"))
         parts = partition_batch(batch, P)
         out = run_dsc_distributed(parts, params, mesh,
-                                  use_kernel=args.use_kernel)
+                                  use_kernel=args.use_kernel,
+                                  use_index=args.use_index)
         res, table = out.result, out.table
         n_rep = int(np.asarray(res.is_rep).sum())
         n_out = int(np.asarray(res.is_outlier).sum())

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.models.config import MoEConfig
+from repro.utils.compat import axis_size as axis_size_compat
+from repro.utils.compat import shard_map as shard_map_compat
 
 COMPUTE_DTYPE = jnp.bfloat16
 
@@ -85,7 +87,7 @@ def moe_ffn(p, x, cfg: MoEConfig, *, axis_name: str | None = None,
     B, L, D = x.shape
     N = B * L
     xt = x.reshape(N, D).astype(COMPUTE_DTYPE)
-    m = 1 if axis_name is None else lax.axis_size(axis_name)
+    m = 1 if axis_name is None else axis_size_compat(axis_name)
     E = p["router"].shape[1]
     E_loc = E // m
     k = cfg.top_k
@@ -210,9 +212,9 @@ def moe_ffn_shard_map(p, x, cfg: MoEConfig, mesh, dp_axes: tuple,
         dropped = lax.pmean(dropped, all_axes)
         return y, aux, dropped
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         body, mesh=mesh, in_specs=(p_specs, x_spec),
-        out_specs=(x_spec, P(), P()), check_vma=False)
+        out_specs=(x_spec, P(), P()))
     return fn(p, x)
 
 

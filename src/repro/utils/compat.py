@@ -1,0 +1,33 @@
+"""Version compatibility shims for the supported JAX range.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (<= 0.4.x, with a
+``check_rep`` flag) to ``jax.shard_map`` (>= 0.5, with ``check_vma``).
+Everything else we rely on is stable across the pinned range.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis, usable for shape arithmetic.
+
+    ``lax.axis_size`` (jax >= 0.5) with the ``core.axis_frame`` fallback
+    for 0.4.x (which returns the bound axis size as a python int).
+    """
+    from jax import lax
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    import jax.core
+    return int(jax.core.axis_frame(axis_name))
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """Uniform shard_map across JAX versions (replication check off by
+    default — the DSC program mixes replicated and sharded outputs)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)

@@ -1,0 +1,69 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+CI installs the real ``hypothesis`` (declared in the ``test`` extra of
+``pyproject.toml``) and this module is then never activated.  On bare
+machines that only have the pinned runtime deps, ``tests/conftest.py``
+registers this shim under ``sys.modules["hypothesis"]`` *before* the test
+modules import it, so collection succeeds and every ``@given`` property
+test still runs — against a fixed, deterministic sample of examples
+instead of hypothesis' adaptive search.
+
+Only the tiny surface the test-suite uses is provided:
+
+* ``strategies.integers(lo, hi)``
+* ``@given(*strategies)`` — runs the test body for ``_NUM_EXAMPLES``
+  deterministic draws (seeded per test name, so failures reproduce)
+* ``@settings(...)`` — accepted and ignored
+"""
+from __future__ import annotations
+
+import random
+import types
+
+_NUM_EXAMPLES = 5
+
+
+class _IntegersStrategy:
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = lo, hi
+
+    def example(self, rng: random.Random) -> int:
+        # Always include the bounds in the sampled set via the first draws.
+        return rng.choice((self.lo, self.hi, rng.randint(self.lo, self.hi)))
+
+
+def integers(min_value: int, max_value: int) -> _IntegersStrategy:
+    return _IntegersStrategy(min_value, max_value)
+
+
+def given(*strats):
+    def deco(fn):
+        def wrapper(*args, **kw):
+            rng = random.Random(fn.__name__)
+            for _ in range(_NUM_EXAMPLES):
+                fn(*args, *(s.example(rng) for s in strats), **kw)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return deco
+
+
+def settings(**_kw):
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def build_module() -> types.ModuleType:
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = integers
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.__is_fallback__ = True
+    return mod

@@ -1,8 +1,25 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS device-count forcing here — smoke
 tests and benches must see the real (single) device.  Multi-device tests
 spawn subprocesses with their own flags (see test_distributed.py)."""
+import sys
+
 import numpy as np
 import pytest
+
+try:                                    # real hypothesis when installed (CI)
+    import hypothesis  # noqa: F401
+except ImportError:                     # deterministic fallback otherwise
+    import importlib.util
+    import os
+
+    _spec = importlib.util.spec_from_file_location(
+        "_hypothesis_fallback",
+        os.path.join(os.path.dirname(__file__), "_hypothesis_fallback.py"))
+    _fb = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_fb)
+    _mod = _fb.build_module()
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies
 
 from repro.core.types import DSCParams
 from repro.data.synthetic import ais_like, figure1_scenario

@@ -75,6 +75,11 @@ _DRIVER = textwrap.dedent("""
     report["p4_kernel_agree"] = float(
         (np.asarray(out_k.result.member_of) == member_of).mean())
 
+    # spatiotemporal-index-pruned join agrees exactly
+    out_i = run_dsc_distributed(parts, params, mesh, use_index=True)
+    report["p4_index_agree"] = float(
+        (np.asarray(out_i.result.member_of) == member_of).mean())
+
     print("JSON" + json.dumps(report))
 """)
 
@@ -91,11 +96,15 @@ def dist_report():
     return json.loads(line[4:])
 
 
+@pytest.mark.distributed
+@pytest.mark.slow
 def test_p1_matches_single_host(dist_report):
     assert dist_report["p1_member_agree"] >= 0.999
     assert dist_report["p1_rep_agree"] >= 0.999
 
 
+@pytest.mark.distributed
+@pytest.mark.slow
 def test_p4_structure(dist_report):
     assert dist_report["p4_reps"] > 0
     assert dist_report["p4_members"] > 0
@@ -103,8 +112,17 @@ def test_p4_structure(dist_report):
     assert dist_report["p4_state_partition"]
 
 
+@pytest.mark.distributed
+@pytest.mark.slow
 def test_p4_kernel_path(dist_report):
     assert dist_report["p4_kernel_agree"] >= 0.98
+
+
+@pytest.mark.distributed
+@pytest.mark.slow
+def test_p4_index_pruned_join_agrees(dist_report):
+    """use_index=True (halo bbox buckets + pair pruning) is lossless."""
+    assert dist_report["p4_index_agree"] == 1.0
 
 
 def test_partitioning_is_equi_depth():

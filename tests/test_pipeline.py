@@ -8,6 +8,8 @@ import textwrap
 
 import pytest
 
+pytestmark = [pytest.mark.distributed, pytest.mark.slow]
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 _DRIVER = textwrap.dedent("""
