@@ -124,10 +124,22 @@ def build_dsc_program(
     model_axis: str = "model",
     use_kernel: bool = False,
     use_index: bool = False,
+    mode: str = "materialize",      # "materialize" | "fused"
     sim_strategy: str = "psum",     # "psum" | "allgather" (column-sharded)
     sim_dtype: str = "f32",         # "f32" | "bf16" collective payload
 ):
     """Build the shard_map program (not yet jitted) for ``parts`` shapes.
+
+    ``mode="fused"`` streams the JOIN phase per halo slab: instead of
+    building the per-rank ``[T, Mp, Tc]`` join cube and re-reading it for
+    votes / TSA2 masks / the SP scatter, two fused Pallas sweeps accumulate
+    those outputs directly (pass 2 re-sweeps after segmentation).  The
+    collective payloads shrink with the buffers: votes psum as before, TSA2
+    neighbor sets all_gather as packed words (32x smaller than the bool
+    ``matched`` cube), and the SP accumulator follows ``sim_strategy``
+    unchanged.  ``use_index`` composes with it (the halo bbox bucketing is
+    join-free); the in-kernel delta_t refine matches ``filter_delta_t`` on
+    the partition slab exactly.
 
     ``sim_strategy="allgather"`` exploits that each model rank's scatter
     targets only ITS candidate-column block of the SP matrix: instead of a
@@ -144,6 +156,8 @@ def build_dsc_program(
     downstream reduction), and the jnp join path additionally skips
     (ref row, cand row) pairs whose bboxes are provably farther than eps
     apart.  Both filters are conservative, so results are unchanged."""
+    if mode not in ("materialize", "fused"):
+        raise ValueError(f"unknown mode {mode!r}")
     nP = mesh.shape[part_axis]
     nM = mesh.shape[model_axis]
     Pn, T, Mp = parts.x.shape
@@ -211,48 +225,70 @@ def build_dsc_program(
         sl = lambda a: lax.dynamic_slice_in_dim(a, c0, Tc, axis=0)
         cid = lax.dynamic_slice_in_dim(traj_id, c0, Tc, axis=0)
 
-        ref_ids = jnp.broadcast_to(traj_id[:, None], (T, Mp)).reshape(-1)
-        if use_kernel:
-            from repro.kernels import default_interpret
-            from repro.kernels.stjoin.stjoin import stjoin_pallas
-            bw, bidx = stjoin_pallas(
-                px.reshape(-1), py.reshape(-1), pt.reshape(-1),
-                ref_ids.astype(jnp.int32), pv.reshape(-1),
-                sl(cx), sl(cy), sl(ct), cid, sl(cv),
-                params.eps_sp, params.eps_t,
-                bp=_pick_block(T * Mp, 256), bc=_pick_block(Tc, 8),
-                bm=_pick_block(3 * Mp, 128), interpret=default_interpret())
+        if mode == "fused":
+            # streaming join epilogue: per-rank fused sweep over the halo
+            # slab — votes and packed neighbor words, never the [T, Mp, Tc]
+            # cube.  delta_t refine happens in-kernel on the slab rows.
+            from repro.kernels.stjoin.ops import stjoin_vote_fused_arrays
+            join = None
+            vote_l, words_l = stjoin_vote_fused_arrays(
+                px, py, pt, pv, traj_id,
+                sl(cx), sl(cy), sl(ct), sl(cv), cid,
+                params.eps_sp, params.eps_t, params.delta_t,
+                with_masks=params.segmentation == "tsa2")
+            vote = lax.psum(vote_l, model_axis)            # [T, Mp]
+            if params.segmentation == "tsa2":
+                allw = lax.all_gather(words_l, model_axis)  # [nM, T, Mp, Wl]
+                masks = jnp.moveaxis(allw, 0, 2).reshape(
+                    T, Mp, nM * words_l.shape[-1])
+            else:
+                masks = jnp.zeros((T, Mp, 1), jnp.uint32)
         else:
-            from repro.kernels.stjoin.ref import stjoin_ref
-            pair_mask = None
-            if use_index:
-                from repro.index.grid import trajectory_pair_mask
-                pmask = trajectory_pair_mask(
-                    px, py, pt, pv, sl(cx), sl(cy), sl(ct), sl(cv),
-                    params.eps_sp, params.eps_t)           # [T, Tc]
-                pair_mask = jnp.repeat(pmask, Mp, axis=0)  # [T*Mp, Tc]
-            bw, bidx = stjoin_ref(
-                px.reshape(-1), py.reshape(-1), pt.reshape(-1),
-                ref_ids, pv.reshape(-1),
-                sl(cx), sl(cy), sl(ct), cid, sl(cv),
-                jnp.asarray(params.eps_sp, jnp.float32), eps_t,
-                pair_mask=pair_mask)
+            ref_ids = jnp.broadcast_to(traj_id[:, None], (T, Mp)).reshape(-1)
+            if use_kernel:
+                from repro.kernels import default_interpret
+                from repro.kernels.stjoin.stjoin import stjoin_pallas
+                bw, bidx = stjoin_pallas(
+                    px.reshape(-1), py.reshape(-1), pt.reshape(-1),
+                    ref_ids.astype(jnp.int32), pv.reshape(-1),
+                    sl(cx), sl(cy), sl(ct), cid, sl(cv),
+                    params.eps_sp, params.eps_t,
+                    bp=_pick_block(T * Mp, 256), bc=_pick_block(Tc, 8),
+                    bm=_pick_block(3 * Mp, 128),
+                    interpret=default_interpret())
+            else:
+                from repro.kernels.stjoin.ref import stjoin_ref
+                pair_mask = None
+                if use_index:
+                    from repro.index.grid import trajectory_pair_mask
+                    pmask = trajectory_pair_mask(
+                        px, py, pt, pv, sl(cx), sl(cy), sl(ct), sl(cv),
+                        params.eps_sp, params.eps_t)           # [T, Tc]
+                    pair_mask = jnp.repeat(pmask, Mp, axis=0)  # [T*Mp, Tc]
+                bw, bidx = stjoin_ref(
+                    px.reshape(-1), py.reshape(-1), pt.reshape(-1),
+                    ref_ids, pv.reshape(-1),
+                    sl(cx), sl(cy), sl(ct), cid, sl(cv),
+                    jnp.asarray(params.eps_sp, jnp.float32), eps_t,
+                    pair_mask=pair_mask)
 
-        join = JoinResult(best_w=bw.reshape(T, Mp, Tc),
-                          best_idx=bidx.reshape(T, Mp, Tc))
-        dt = jnp.asarray(params.delta_t, jnp.float32)
-        join = jax.lax.cond(
-            dt > 0.0, lambda j: filter_delta_t(j, pt, dt), lambda j: j, join)
+            join = JoinResult(best_w=bw.reshape(T, Mp, Tc),
+                              best_idx=bidx.reshape(T, Mp, Tc))
+            dt = jnp.asarray(params.delta_t, jnp.float32)
+            join = jax.lax.cond(
+                dt > 0.0, lambda j: filter_delta_t(j, pt, dt),
+                lambda j: j, join)
 
-        vote = lax.psum(jnp.sum(join.best_w, axis=-1), model_axis)  # [T, Mp]
+            vote = lax.psum(
+                jnp.sum(join.best_w, axis=-1), model_axis)  # [T, Mp]
 
-        if params.segmentation == "tsa2":
-            matched = join.best_w > 0.0                    # [T, Mp, Tc]
-            allm = lax.all_gather(matched, model_axis)     # [nM, T, Mp, Tc]
-            allm = jnp.moveaxis(allm, 0, 2).reshape(T, Mp, nM * Tc)
-            masks = _pack_bits(allm)                       # [T, Mp, W]
-        else:
-            masks = jnp.zeros((T, Mp, 1), jnp.uint32)
+            if params.segmentation == "tsa2":
+                matched = join.best_w > 0.0                # [T, Mp, Tc]
+                allm = lax.all_gather(matched, model_axis)  # [nM, T, Mp, Tc]
+                allm = jnp.moveaxis(allm, 0, 2).reshape(T, Mp, nM * Tc)
+                masks = _pack_bits(allm)                   # [T, Mp, W]
+            else:
+                masks = jnp.zeros((T, Mp, 1), jnp.uint32)
 
         # ---------------- phase 2: regroup by trajectory ----------------
         def regroup(a):      # [T, Mp, ...] -> [Tl, nP * Mp, ...]
@@ -319,32 +355,52 @@ def build_dsc_program(
 
         # ---------------- phase 4: similarity (SP relation) -------------
         gid_cand = sl(gid_cat)                             # [Tc, 3Mp]
-        idx = jnp.clip(join.best_idx, 0, 3 * Mp - 1)
-        dst = jnp.where(
-            join.best_idx >= 0,
-            gid_cand[jnp.arange(Tc)[None, None, :], idx], S)  # [T, Mp, Tc]
-        src = jnp.broadcast_to(gid_own[:, :, None], (T, Mp, Tc))
+        if mode != "fused":
+            idx = jnp.clip(join.best_idx, 0, 3 * Mp - 1)
+            dst = jnp.where(
+                join.best_idx >= 0,
+                gid_cand[jnp.arange(Tc)[None, None, :], idx],
+                S)                                         # [T, Mp, Tc]
+            src = jnp.broadcast_to(gid_own[:, :, None], (T, Mp, Tc))
 
         if sim_strategy == "allgather":
             S_loc = Tc * maxS
             c0s = c0 * maxS
-            dst_l = jnp.where(dst < S, dst - c0s, S_loc)
-            raw = jnp.zeros((S + 1, S_loc + 1), jnp.float32)
-            raw = raw.at[src.reshape(-1), dst_l.reshape(-1)].add(
-                join.best_w.reshape(-1))
-            raw = raw[:S, :S_loc]
+            if mode == "fused":
+                # pass 2: re-sweep the halo slab, scatter refined weights
+                # into this rank's [S, S_loc] column block in-kernel
+                from repro.kernels.stjoin.ops import stjoin_sim_fused_arrays
+                gidc_l = jnp.where(gid_cand < S, gid_cand - c0s, S_loc)
+                raw = stjoin_sim_fused_arrays(
+                    px, py, pt, pv, traj_id, gid_own,
+                    sl(cx), sl(cy), sl(ct), sl(cv), cid, gidc_l,
+                    S, S_loc, params.eps_sp, params.eps_t, params.delta_t)
+            else:
+                dst_l = jnp.where(dst < S, dst - c0s, S_loc)
+                raw = jnp.zeros((S + 1, S_loc + 1), jnp.float32)
+                raw = raw.at[src.reshape(-1), dst_l.reshape(-1)].add(
+                    join.best_w.reshape(-1))
+                raw = raw[:S, :S_loc]
             if sim_dtype == "bf16":
                 raw = raw.astype(jnp.bfloat16)
             gathered = lax.all_gather(raw, model_axis)     # [nM, S, S_loc]
             raw = jnp.moveaxis(gathered, 0, 1).reshape(S, S)
             raw = raw.astype(jnp.float32)
         else:
-            raw = jnp.zeros((S + 1, S + 1), jnp.float32)
-            raw = raw.at[src.reshape(-1), dst.reshape(-1)].add(
-                join.best_w.reshape(-1))
+            if mode == "fused":
+                from repro.kernels.stjoin.ops import stjoin_sim_fused_arrays
+                raw = stjoin_sim_fused_arrays(
+                    px, py, pt, pv, traj_id, gid_own,
+                    sl(cx), sl(cy), sl(ct), sl(cv), cid, gid_cand,
+                    S, S, params.eps_sp, params.eps_t, params.delta_t)
+            else:
+                raw = jnp.zeros((S + 1, S + 1), jnp.float32)
+                raw = raw.at[src.reshape(-1), dst.reshape(-1)].add(
+                    join.best_w.reshape(-1))
+                raw = raw[:S, :S]
             if sim_dtype == "bf16":
                 raw = raw.astype(jnp.bfloat16)
-            raw = lax.psum(raw[:S, :S], model_axis).astype(jnp.float32)
+            raw = lax.psum(raw, model_axis).astype(jnp.float32)
 
         denom = jnp.minimum(table.card[:, None], table.card[None, :])
         sim = raw / jnp.maximum(denom, 1).astype(jnp.float32)

@@ -6,6 +6,21 @@ This is the semantic reference: the distributed pipeline
 
     subtrajectory join (Problem 1)  ->  voting  ->  segmentation (Problem 2)
     ->  ST / SP relations  ->  clustering + outliers (Problem 3)
+
+Execution modes (``mode=``, see README §Execution modes / DESIGN.md §3):
+
+* ``"materialize"`` — the parity oracle: the DTJ join cube
+  ``JoinResult [T, M, C]`` is built in HBM and re-read by each consumer
+  (voting, TSA2 masks, similarity scatter).
+* ``"fused"``       — streaming epilogue fusion: two Pallas sweeps
+  accumulate the consumers' O(T*M + S^2) outputs directly; the cube never
+  exists (``DSCOutput.join is None``).  Pass 2 recomputes the best-match
+  tiles after segmentation instead of re-reading them.
+
+``use_index=True`` prunes candidate tiles with the spatiotemporal grid
+(``repro.index.grid``) in every mode; pruning is conservative, so outputs
+are unchanged.  Index planning is host-driven, so that combination requires
+concrete (non-traced) inputs.
 """
 from __future__ import annotations
 
@@ -24,7 +39,7 @@ from repro.utils.tree import pytree_dataclass
 
 @pytree_dataclass
 class DSCOutput:
-    join: JoinResult
+    join: JoinResult | None         # None in fused mode (cube never built)
     vote: jnp.ndarray               # [T, M] point voting
     seg: SubtrajSegmentation
     table: SubtrajTable
@@ -34,38 +49,123 @@ class DSCOutput:
     rmse: jnp.ndarray               # Sec. 6.2 quality metric
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel",))
-def run_dsc(batch: TrajectoryBatch, params: DSCParams,
-            use_kernel: bool = False) -> DSCOutput:
-    """Run the full DSC pipeline on one host / one partition."""
+def _finish(batch, params, join, vote, masks, tile_ids=None,
+            fused_tiles=None) -> DSCOutput:
+    """Segmentation onward — shared by every join/vote front-end."""
+    nvote = voting.normalized_voting(vote, batch.valid)
+    if params.segmentation == "tsa1":
+        seg = segmentation.tsa1(nvote, batch.valid, params.w, params.tau,
+                                params.max_subtrajs_per_traj)
+    else:
+        seg = segmentation.tsa2(masks, batch.valid, params.w, params.tau,
+                                params.max_subtrajs_per_traj)
+
+    table = similarity.build_subtraj_table(
+        batch, seg, vote, params.max_subtrajs_per_traj)
+    if join is None:
+        from repro.kernels.stjoin import ops as stjoin_ops
+        raw = stjoin_ops.stjoin_sim_fused(
+            batch, batch, seg.sub_local, seg.sub_local,
+            params.max_subtrajs_per_traj, params.eps_sp, params.eps_t,
+            params.delta_t, tile_ids=tile_ids,
+            **_tile_kwargs(fused_tiles))
+        sim = similarity.finalize_sim(raw, table)
+    else:
+        sim = similarity.similarity_matrix(
+            join, seg, seg.sub_local, table, params.max_subtrajs_per_traj)
+
+    result = cluster(sim, table, params)
+    return DSCOutput(join=join, vote=vote, seg=seg, table=table, sim=sim,
+                     result=result, sscr=sscr(result, sim),
+                     rmse=rmse(result, sim, params.eps_sp))
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "use_index"))
+def _run_dsc_materialize(batch: TrajectoryBatch, params: DSCParams,
+                         use_kernel: bool, use_index: bool) -> DSCOutput:
     if use_kernel:
         from repro.kernels.stjoin import ops as stjoin_ops
         join = stjoin_ops.subtrajectory_join(
             batch, batch, params.eps_sp, params.eps_t, params.delta_t)
     else:
         join = geometry.subtrajectory_join(
-            batch, batch, params.eps_sp, params.eps_t, params.delta_t)
-
+            batch, batch, params.eps_sp, params.eps_t, params.delta_t,
+            use_index=use_index)
     vote = voting.point_voting(join)
-    nvote = voting.normalized_voting(vote, batch.valid)
+    masks = (voting.neighbor_mask_packed(join)
+             if params.segmentation == "tsa2" else None)
+    return _finish(batch, params, join, vote, masks)
 
-    if params.segmentation == "tsa1":
-        seg = segmentation.tsa1(nvote, batch.valid, params.w, params.tau,
-                                params.max_subtrajs_per_traj)
-    else:
-        masks = voting.neighbor_mask_packed(join)
-        seg = segmentation.tsa2(masks, batch.valid, params.w, params.tau,
-                                params.max_subtrajs_per_traj)
 
-    table = similarity.build_subtraj_table(
-        batch, seg, vote, params.max_subtrajs_per_traj)
-    sim = similarity.similarity_matrix(
-        join, seg, seg.sub_local, table, params.max_subtrajs_per_traj)
+@jax.jit
+def _run_dsc_from_join(batch: TrajectoryBatch, params: DSCParams,
+                       join: JoinResult) -> DSCOutput:
+    """Materializing tail for a join produced outside the jit boundary
+    (the host-planned index-pruned Pallas join)."""
+    vote = voting.point_voting(join)
+    masks = (voting.neighbor_mask_packed(join)
+             if params.segmentation == "tsa2" else None)
+    return _finish(batch, params, join, vote, masks)
 
-    result = cluster(sim, table, params)
-    return DSCOutput(join=join, vote=vote, seg=seg, table=table, sim=sim,
-                     result=result, sscr=sscr(result, sim),
-                     rmse=rmse(result, sim, params.eps_sp))
+
+def _tile_kwargs(fused_tiles):
+    """(rows, bc, bm) static tuple -> fused-kernel keyword overrides."""
+    if fused_tiles is None:
+        return {}
+    rows, bc, bm = fused_tiles
+    return dict(rows=rows, bc=bc, bm=bm)
+
+
+@functools.partial(jax.jit, static_argnames=("fused_tiles",))
+def _run_dsc_fused(batch: TrajectoryBatch, params: DSCParams,
+                   tile_ids=None, fused_tiles=None) -> DSCOutput:
+    from repro.kernels.stjoin import ops as stjoin_ops
+    vote, masks = stjoin_ops.stjoin_vote_fused_arrays(
+        batch.x, batch.y, batch.t, batch.valid, batch.traj_id,
+        batch.x, batch.y, batch.t, batch.valid, batch.traj_id,
+        params.eps_sp, params.eps_t, params.delta_t, tile_ids=tile_ids,
+        with_masks=params.segmentation == "tsa2",
+        **_tile_kwargs(fused_tiles))
+    return _finish(batch, params, None, vote, masks, tile_ids=tile_ids,
+                   fused_tiles=fused_tiles)
+
+
+def run_dsc(batch: TrajectoryBatch, params: DSCParams,
+            use_kernel: bool = False, *, use_index: bool = False,
+            mode: str = "materialize",
+            fused_tiles: tuple[int, int, int] | None = None) -> DSCOutput:
+    """Run the full DSC pipeline on one host / one partition.
+
+    ``mode="fused"`` streams the join (no ``[T, M, C]`` cube;
+    ``out.join is None``); ``mode="materialize"`` is the parity oracle.
+    ``use_index=True`` additionally prunes candidate tiles — host-driven
+    planning, so the inputs must be concrete in that case.
+    ``fused_tiles=(rows, bc, bm)`` overrides the fused kernels' tile
+    geometry (benchmarks use this to pin one inspected configuration).
+    """
+    if mode not in ("materialize", "fused"):
+        raise ValueError(f"unknown mode {mode!r}")
+    if mode == "fused":
+        tile_ids = None
+        if use_index:
+            from repro.kernels.stjoin import ops as stjoin_ops
+            plan = stjoin_ops.plan_fused_tiles(
+                batch.x, batch.y, batch.t, batch.valid,
+                batch.x, batch.y, batch.t, batch.valid,
+                params.eps_sp, params.eps_t, **_tile_kwargs(fused_tiles))
+            # bind the plan's resolved geometry so both passes sweep the
+            # exact tiling the ids were built for
+            tile_ids = plan.tile_ids
+            fused_tiles = (plan.rows, plan.bc, plan.bm)
+        return _run_dsc_fused(batch, params, tile_ids, fused_tiles)
+    if use_index and use_kernel:
+        # grid-pruned Pallas join: host-side planning pass, then jitted tail
+        from repro.kernels.stjoin import ops as stjoin_ops
+        join = stjoin_ops.subtrajectory_join(
+            batch, batch, params.eps_sp, params.eps_t, params.delta_t,
+            use_index=True)
+        return _run_dsc_from_join(batch, params, join)
+    return _run_dsc_materialize(batch, params, use_kernel, use_index)
 
 
 def cluster_summary(out: DSCOutput) -> dict:

@@ -102,36 +102,64 @@ def tsa1(norm_vote: jnp.ndarray, valid: jnp.ndarray, w: int, tau,
 def _windowed_union(masks: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray):
     """OR-reduce packed masks over index window [lo, hi] per position.
 
-    ``masks``: [T, M, W] uint32. Windowed OR via prefix/suffix block trick is
-    implemented in the Pallas kernel; the reference path uses a cumulative
-    *count* per bit (cheap because counts of 0/1 bits OR == count > 0) —
-    we expand to per-bit counts lazily in uint8 to bound memory.
+    ``masks``: [T, M, W] uint32. Windowed OR via prefix/suffix block trick
+    is implemented in the Pallas kernel; the reference path uses a
+    cumulative *count* per bit (OR of 0/1 bits == count > 0), expanding
+    every word to 32 bit-planes at once ([T, M, W*32]).  Callers that only
+    need aggregate counts should go through ``_window_overlap_counts``,
+    which feeds this one word at a time to bound memory; the full
+    expansion here doubles as the regression oracle.
     """
     T, M, W = masks.shape
+    B = W * 32
     bits = ((masks[..., None] >> jnp.arange(32, dtype=jnp.uint32)) & 1)
-    bits = bits.astype(jnp.int32).reshape(T, M, W * 32)          # [T, M, B]
+    bits = bits.astype(jnp.int32).reshape(T, M, B)               # [T, M, B]
     csum = jnp.cumsum(bits, axis=1)
 
     def take(c, idx):
         idxc = jnp.clip(idx, 0, M - 1)
         return jnp.take_along_axis(
-            c, jnp.broadcast_to(idxc[None, :, None], (T, M, W * 32)), axis=1)
+            c, jnp.broadcast_to(idxc[None, :, None], (T, M, B)), axis=1)
 
     hi_v = jnp.where((hi >= 0)[None, :, None], take(csum, hi), 0)
     lo_v = jnp.where((lo > 0)[None, :, None], take(csum, lo - 1), 0)
     return (hi_v - lo_v) > 0                                     # [T, M, B]
 
 
+def _window_overlap_counts(masks: jnp.ndarray, w: int):
+    """Per-position W1/W2 set-union intersection and union cardinalities.
+
+    The naive reference expanded all ``W * 32`` bit-planes to an int32
+    cumsum at once — a ``[T, M, W*32]`` intermediate that dwarfs the packed
+    masks by 128x and made TSA2 un-runnable at benchmark shapes.  The
+    Jaccard numerator/denominator are plain sums over bits, so a
+    ``fori_loop`` folds one 32-bit plane chunk at a time: peak extra memory
+    is ``[T, M, 32]`` int32 and the traced graph holds ONE copy of the
+    chunk body regardless of W.  Output equality with the all-at-once
+    expansion is pinned by ``tests/test_segmentation.py``.
+    """
+    T, M, W = masks.shape
+    n = jnp.arange(M)
+
+    def body(wi, carry):
+        inter, union = carry
+        word = jax.lax.dynamic_slice_in_dim(masks, wi, 1, axis=2)
+        l1 = _windowed_union(word, n - w, n - 1)              # [T, M, 32]
+        l2 = _windowed_union(word, n, n + w - 1)
+        return (inter + jnp.sum(l1 & l2, axis=-1, dtype=jnp.int32),
+                union + jnp.sum(l1 | l2, axis=-1, dtype=jnp.int32))
+
+    zeros = jnp.zeros((T, M), jnp.int32)
+    return jax.lax.fori_loop(0, W, body, (zeros, zeros))
+
+
 def tsa2(packed_masks: jnp.ndarray, valid: jnp.ndarray, w: int, tau,
          max_subs: int = 8) -> SubtrajSegmentation:
     """Algorithm 3: composition-change segmentation (windowed Jaccard)."""
-    T, M, _ = packed_masks.shape
     count = jnp.sum(valid, axis=1)
-    n = jnp.arange(M)
-    l1 = _windowed_union(packed_masks, n - w, n - 1)             # [T, M, B]
-    l2 = _windowed_union(packed_masks, n, n + w - 1)
-    inter = jnp.sum(l1 & l2, axis=-1).astype(jnp.float32)
-    union = jnp.sum(l1 | l2, axis=-1).astype(jnp.float32)
+    inter, union = _window_overlap_counts(packed_masks, w)
+    inter = inter.astype(jnp.float32)
+    union = union.astype(jnp.float32)
     d = jnp.where(union > 0, 1.0 - inter / jnp.maximum(union, 1.0), 0.0)
     cuts = _local_max_cuts(d, valid, w, tau, count)
     return _finalize(cuts, valid, jnp.where(valid, d, 0.0), max_subs)

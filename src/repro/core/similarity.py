@@ -54,6 +54,20 @@ def build_subtraj_table_arrays(t: jnp.ndarray, valid: jnp.ndarray,
         voting=voting, card=card, valid=valid, traj_row=traj_row)
 
 
+def finalize_sim(raw: jnp.ndarray, table: SubtrajTable) -> jnp.ndarray:
+    """Eq. 2 normalization of the raw SP scatter: shared by the
+    materializing path (``similarity_matrix``) and the fused streaming path
+    (``kernels.stjoin.ops.stjoin_sim_fused``), so both produce the same
+    matrix from the same accumulator.
+    """
+    S = table.num_slots
+    denom = jnp.minimum(table.card[:, None], table.card[None, :])
+    sim = raw / jnp.maximum(denom, 1).astype(jnp.float32)
+    sim = jnp.maximum(sim, sim.T)
+    sim = jnp.where(table.valid[:, None] & table.valid[None, :], sim, 0.0)
+    return sim * (1.0 - jnp.eye(S, dtype=sim.dtype))
+
+
 def similarity_matrix(
     join: JoinResult,
     ref_seg: SubtrajSegmentation,
@@ -83,10 +97,4 @@ def similarity_matrix(
 
     raw = jnp.zeros((S + 1, S + 1), jnp.float32)
     raw = raw.at[src.reshape(-1), dst.reshape(-1)].add(join.best_w.reshape(-1))
-    raw = raw[:S, :S]
-
-    denom = jnp.minimum(table.card[:, None], table.card[None, :])
-    sim = raw / jnp.maximum(denom, 1).astype(jnp.float32)
-    sim = jnp.maximum(sim, sim.T)
-    sim = jnp.where(table.valid[:, None] & table.valid[None, :], sim, 0.0)
-    return sim * (1.0 - jnp.eye(S, dtype=sim.dtype))
+    return finalize_sim(raw[:S, :S], table)

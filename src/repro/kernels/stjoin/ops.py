@@ -13,6 +13,7 @@ Two entry points:
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import numpy as np
 
@@ -23,7 +24,14 @@ from repro.core.geometry import filter_delta_t
 from repro.core.types import JoinResult, TrajectoryBatch
 from repro.index import grid as gridx
 from repro.kernels import default_interpret
-from repro.kernels.stjoin.stjoin import stjoin_pallas, stjoin_pallas_pruned
+from repro.kernels.stjoin.stjoin import (
+    stjoin_pallas,
+    stjoin_pallas_pruned,
+    stjoin_sim_fused_flat,
+    stjoin_sim_fused_pruned_flat,
+    stjoin_vote_fused_flat,
+    stjoin_vote_fused_pruned_flat,
+)
 
 
 def _pad_to(x: jnp.ndarray, mult: int, axis: int, fill):
@@ -151,6 +159,267 @@ def best_match_join_pruned(ref: TrajectoryBatch, cand: TrajectoryBatch,
     if return_stats:
         return out, gridx.prune_stats(counts, mask.shape[1])
     return out
+
+
+# ---------------------------------------------------------------------------
+# Fused streaming join (epilogue fusion): the [T, M, C] JoinResult cube is
+# never materialized.  Pass 1 (``stjoin_vote_fused``) returns the per-point
+# vote sums and the bit-packed TSA2 neighbor words; pass 2
+# (``stjoin_sim_fused``) re-sweeps the same tiles after segmentation and
+# scatter-adds refined weights straight into the raw similarity accumulator.
+# Both accept an optional pre-computed ``tile_ids`` plan (``plan_fused_tiles``)
+# to sweep only the index-surviving candidate tiles.
+# ---------------------------------------------------------------------------
+
+
+def _fused_geometry(T: int, M: int, Mc: int, rows: int | None, bc: int,
+                    bm: int):
+    """Resolve the fused kernels' tile geometry for raw [T, M]/[C, Mc] data.
+
+    Ref blocks must hold whole trajectory rows (in-kernel delta_t refine),
+    so the block is ``rows`` rows of ``M`` points; ``bc`` is clamped to a
+    divisor of 32 (a candidate block must stay inside one packed word);
+    ``bm`` is clamped to the candidate row length.  Defaults favor fat
+    tiles (~2048 ref points per block, capped at the whole batch): the
+    fused kernels write no per-tile output blocks, so fewer grid steps is
+    pure win; the per-chunk working set ``[bp, bc, bm]`` stays VMEM-sized
+    via the inner ``bm`` loop.
+    """
+    rows = rows if rows is not None else max(1, 2048 // max(M, 1))
+    rows = min(rows, max(T, 1))
+    bc = max(d for d in (1, 2, 4, 8, 16, 32) if d <= max(bc, 1))
+    bm = min(bm, Mc)
+    mc_pad = (-Mc) % bm
+    return rows, bc, bm, mc_pad
+
+
+def _fused_ref_operands(rx, ry, rt, rvalid, rid, rows: int):
+    """Pad to whole ref blocks and flatten row-major (rows stay contiguous)."""
+    T, M = rx.shape
+    padT = (-T) % rows
+    pad2 = lambda a, f: jnp.pad(a, ((0, padT), (0, 0)), constant_values=f)
+    rid_full = jnp.broadcast_to(rid[:, None], (T, M))
+    return (pad2(rx, 0.0).reshape(-1), pad2(ry, 0.0).reshape(-1),
+            pad2(rt, 0.0).reshape(-1),
+            pad2(rid_full.astype(jnp.int32), -1).reshape(-1),
+            pad2(rvalid, False).reshape(-1))
+
+
+def _fused_cand_operands(cx, cy, ct, cvalid, cid, bm: int, mc_pad: int):
+    """Pad candidates to whole words (C -> multiple of 32) and bm chunks.
+
+    Returned in kernel operand order: ``(x, y, t, id, ok)``.
+    """
+    C, _ = cx.shape
+    padC = (-C) % 32
+    pad = lambda a, f: jnp.pad(a, ((0, padC), (0, mc_pad)), constant_values=f)
+    return (pad(cx, 0.0), pad(cy, 0.0), pad(ct, 0.0),
+            jnp.pad(cid.astype(jnp.int32), (0, padC), constant_values=-2),
+            pad(cvalid, False))
+
+
+class FusedTilePlan(NamedTuple):
+    """A candidate-tile plan bound to the geometry it was built for.
+
+    ``tile_ids`` column values index candidate *blocks of ``bc`` rows*, so
+    reusing a plan under a different geometry would silently mis-address
+    candidates — the fused entry points therefore verify these fields
+    against their own resolved geometry before sweeping.
+    """
+
+    tile_ids: jnp.ndarray     # [nRb, K] int32, -1 padded, ascending
+    rows: int
+    bc: int
+    bm: int
+
+
+def _resolve_plan(tile_ids, rows: int, bc: int, bm: int):
+    """Unpack a FusedTilePlan (geometry-checked) or pass a raw array."""
+    if tile_ids is None:
+        return None
+    if isinstance(tile_ids, FusedTilePlan):
+        if (tile_ids.rows, tile_ids.bc, tile_ids.bm) != (rows, bc, bm):
+            raise ValueError(
+                f"tile plan was built for geometry rows={tile_ids.rows}, "
+                f"bc={tile_ids.bc}, bm={tile_ids.bm} but the sweep resolved "
+                f"rows={rows}, bc={bc}, bm={bm}; candidate blocks would be "
+                "mis-addressed")
+        return tile_ids.tile_ids
+    return tile_ids
+
+
+def plan_fused_tiles(rx, ry, rt, rvalid, cx, cy, ct, cvalid, eps_sp, eps_t,
+                     *, rows: int | None = None, bc: int = 16, bm: int = 128,
+                     use_cells: bool = True, max_tiles: int | None = None):
+    """Host-driven candidate-tile plan for the fused kernels.
+
+    Same two-stage conservative pruning as ``plan_join_index`` but on raw
+    ``[T, M]`` / ``[C, Mc]`` arrays with the fused row-aligned block
+    geometry.  Returns a ``FusedTilePlan`` (tile ids -1 padded, ascending,
+    plus the resolved geometry) ready for the ``*_pruned`` fused entry
+    points, which reject a plan whose geometry differs from their own.
+    Raises if ``max_tiles`` would drop a survivor.
+    """
+    M = rx.shape[1]
+    rows, bc, bm, mc_pad = _fused_geometry(
+        rx.shape[0], M, cx.shape[1], rows, bc, bm)
+    bp = rows * M
+    frx, fry, frt, _, frok = _fused_ref_operands(
+        rx, ry, rt, rvalid, jnp.zeros((rx.shape[0],), jnp.int32), rows)
+    fcx, fcy, fct, _, fcok = _fused_cand_operands(
+        cx, cy, ct, cvalid, jnp.zeros((cx.shape[0],), jnp.int32), bm, mc_pad)
+
+    rboxes = gridx.point_block_boxes(frx, fry, frt, frok, bp)
+    cboxes = gridx.traj_block_boxes(fcx, fcy, fct, fcok, bc)
+    if use_cells:
+        spec = gridx.fit_grid(cboxes, float(eps_sp), float(eps_t))
+        table = gridx.build_cell_table(spec, cboxes)
+        mask = gridx.candidate_tile_mask(
+            spec, table, rboxes, cboxes, eps_sp, eps_t)
+    else:
+        mask = gridx.exact_pair_mask(rboxes, cboxes, eps_sp, eps_t)
+    counts = jnp.sum(mask, axis=1).astype(jnp.int32)
+    need = gridx.plan_max_tiles(counts)
+    # K >= 1 even when nothing survives: a zero-width slot axis would give
+    # the pruned kernels an empty grid and leave their accumulators
+    # uninitialized
+    K = max(max_tiles, 1) if max_tiles is not None else need
+    if int(np.max(np.asarray(counts), initial=0)) > K:
+        raise ValueError(
+            f"max_tiles={K} drops candidate tiles (need {need}); "
+            "the fused pruned sweep would no longer match the dense sweep")
+    tile_ids, _ = gridx.compact_candidates(mask, K)
+    return FusedTilePlan(tile_ids=tile_ids, rows=rows, bc=bc, bm=bm)
+
+
+def stjoin_vote_fused_arrays(rx, ry, rt, rvalid, rid, cx, cy, ct, cvalid,
+                             cid, eps_sp, eps_t, delta_t=0.0, *,
+                             rows: int | None = None, bc: int = 16,
+                             bm: int = 128, tile_ids=None,
+                             with_masks: bool = True,
+                             interpret: bool | None = None):
+    """Fused pass 1 on raw arrays: ``(vote [T, M], words [T, M, ceil(C/32)])``.
+
+    Subsumes ``voting.point_voting`` and ``voting.neighbor_mask_packed``
+    over a delta_t-refined join without materializing it.  ``tile_ids``
+    (from ``plan_fused_tiles`` with identical geometry) switches to the
+    index-pruned sweep; identical output either way.  ``with_masks=False``
+    (segmentation won't consume neighbor sets, i.e. TSA1) returns
+    ``(vote, None)`` and skips the packed-word accumulator entirely.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    T, M = rx.shape
+    C, Mc = cx.shape
+    rows, bc, bm, mc_pad = _fused_geometry(T, M, Mc, rows, bc, bm)
+    tile_ids = _resolve_plan(tile_ids, rows, bc, bm)
+    ref_ops = _fused_ref_operands(rx, ry, rt, rvalid, rid, rows)
+    cand_ops = _fused_cand_operands(cx, cy, ct, cvalid, cid, bm, mc_pad)
+
+    if tile_ids is None:
+        vote, words = stjoin_vote_fused_flat(
+            *ref_ops, *cand_ops, eps_sp, eps_t, delta_t, rows=rows, M=M,
+            bc=bc, bm=bm, with_words=with_masks, interpret=interpret)
+    else:
+        vote, words = stjoin_vote_fused_pruned_flat(
+            *ref_ops, *cand_ops, tile_ids, eps_sp, eps_t, delta_t,
+            rows=rows, M=M, bc=bc, bm=bm, with_words=with_masks,
+            interpret=interpret)
+    vote = vote[:T * M].reshape(T, M)
+    if words is None:
+        return vote, None
+    W = -(-C // 32)
+    return vote, words[:T * M].reshape(T, M, -1)[:, :, :W]
+
+
+def stjoin_vote_fused(ref: TrajectoryBatch, cand: TrajectoryBatch,
+                      eps_sp, eps_t, delta_t=0.0, *, use_index: bool = False,
+                      use_cells: bool = True, max_tiles: int | None = None,
+                      rows: int | None = None, bc: int = 16, bm: int = 128,
+                      with_masks: bool = True,
+                      interpret: bool | None = None):
+    """Batch-level fused pass 1 (vote sums + packed neighbor words)."""
+    tile_ids = None
+    if use_index:
+        tile_ids = plan_fused_tiles(
+            ref.x, ref.y, ref.t, ref.valid, cand.x, cand.y, cand.t,
+            cand.valid, eps_sp, eps_t, rows=rows, bc=bc, bm=bm,
+            use_cells=use_cells, max_tiles=max_tiles)
+    return stjoin_vote_fused_arrays(
+        ref.x, ref.y, ref.t, ref.valid, ref.traj_id, cand.x, cand.y,
+        cand.t, cand.valid, cand.traj_id, eps_sp, eps_t, delta_t,
+        rows=rows, bc=bc, bm=bm, tile_ids=tile_ids,
+        with_masks=with_masks, interpret=interpret)
+
+
+def stjoin_sim_fused_arrays(rx, ry, rt, rvalid, rid, ref_gid, cx, cy, ct,
+                            cvalid, cid, cand_gid, n_src: int, n_dst: int,
+                            eps_sp, eps_t, delta_t=0.0, *,
+                            rows: int | None = None, bc: int = 16,
+                            bm: int = 128, tile_ids=None,
+                            interpret: bool | None = None):
+    """Fused pass 2 on raw arrays: raw similarity scatter ``[n_src, n_dst]``.
+
+    ``ref_gid [T, M]``: destination row of each ref point (``n_src`` =
+    sentinel).  ``cand_gid [C, Mc]``: destination column of each candidate
+    point (``n_dst`` = sentinel).  Subsumes the materializing
+    ``similarity_matrix`` gather/scatter over T*M*C elements; normalization
+    is left to ``similarity.finalize_sim`` so both paths share the math.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    T, M = rx.shape
+    C, Mc = cx.shape
+    rows, bc, bm, mc_pad = _fused_geometry(T, M, Mc, rows, bc, bm)
+    tile_ids = _resolve_plan(tile_ids, rows, bc, bm)
+    ref_ops = _fused_ref_operands(rx, ry, rt, rvalid, rid, rows)
+    padT = (-T) % rows
+    gid_flat = jnp.pad(ref_gid.astype(jnp.int32), ((0, padT), (0, 0)),
+                       constant_values=n_src).reshape(-1)
+    cand_ops = _fused_cand_operands(cx, cy, ct, cvalid, cid, bm, mc_pad)
+    padC = (-C) % 32
+    cgid = jnp.pad(cand_gid.astype(jnp.int32), ((0, padC), (0, mc_pad)),
+                   constant_values=n_dst)
+
+    if tile_ids is None:
+        return stjoin_sim_fused_flat(
+            *ref_ops, gid_flat, *cand_ops, cgid, eps_sp, eps_t, delta_t,
+            rows=rows, M=M, n_src=n_src, n_dst=n_dst, bc=bc, bm=bm,
+            interpret=interpret)
+    return stjoin_sim_fused_pruned_flat(
+        *ref_ops, gid_flat, *cand_ops, cgid, tile_ids, eps_sp, eps_t,
+        delta_t, rows=rows, M=M, n_src=n_src, n_dst=n_dst, bc=bc, bm=bm,
+        interpret=interpret)
+
+
+def stjoin_sim_fused(ref: TrajectoryBatch, cand: TrajectoryBatch,
+                     ref_sub_local, cand_sub_local, max_subs: int,
+                     eps_sp, eps_t, delta_t=0.0, *, tile_ids=None,
+                     rows: int | None = None, bc: int = 16, bm: int = 128,
+                     interpret: bool | None = None):
+    """Batch-level fused pass 2: un-normalized ``raw [S_ref, S_cand]``.
+
+    Slot maps mirror ``similarity_matrix``: ref point (r, m) scatters into
+    row ``r * max_subs + sub_local[r, m]``; the matched candidate point
+    (c, best_idx) into column ``c * max_subs + cand_sub_local[c, idx]``.
+    """
+    T, M = ref.x.shape
+    C, Mc = cand.x.shape
+    n_src = T * max_subs
+    n_dst = C * max_subs
+    ref_gid = jnp.where(
+        ref_sub_local >= 0,
+        jnp.arange(T, dtype=jnp.int32)[:, None] * max_subs
+        + ref_sub_local, n_src)
+    cand_gid = jnp.where(
+        cand_sub_local >= 0,
+        jnp.arange(C, dtype=jnp.int32)[:, None] * max_subs
+        + cand_sub_local, n_dst)
+    return stjoin_sim_fused_arrays(
+        ref.x, ref.y, ref.t, ref.valid, ref.traj_id, ref_gid,
+        cand.x, cand.y, cand.t, cand.valid, cand.traj_id, cand_gid,
+        n_src, n_dst, eps_sp, eps_t, delta_t, rows=rows, bc=bc, bm=bm,
+        tile_ids=tile_ids, interpret=interpret)
 
 
 def subtrajectory_join(ref: TrajectoryBatch, cand: TrajectoryBatch,

@@ -151,6 +151,472 @@ def _pruned_kernel(ref_x, ref_y, ref_t, ref_id, ref_ok,
     out_idx[0, 0] = jnp.where(better, tile_idx, run_idx)
 
 
+# ---------------------------------------------------------------------------
+# Fused epilogue variants (streaming join): the dense [P, C] best-match cube
+# never leaves VMEM.  The flash-attention idiom (kernels/attention/flash.py)
+# applied to the join: one program instance owns a (ref block, cand block)
+# tile, scans the candidate points in ``bm`` slabs with a running max/argmax
+# carry, and — instead of writing the [bp, bc] tile to HBM — folds it into
+# the consumers' accumulators in-kernel:
+#
+#   pass 1 (``_vote_kernel``)  per-point vote sums [P] (Eq. 4) + bit-packed
+#                              neighbor words [P, C/32] (TSA2, Alg. 3), with
+#                              the delta_t run refine applied in-kernel.
+#   pass 2 (``_sim_kernel``)   scatter-add of refined best-match weights into
+#                              the [S+1, S+1] similarity accumulator (Eq. 2),
+#                              re-sweeping the same tiles (recompute instead
+#                              of a second HBM read of the cube).
+#
+# HBM traffic drops from O(T*M*C) (f32 + i32 cubes, written once and re-read
+# once per consumer) to O(T*M + T*M*C/32 + S^2) accumulator bytes.
+# ---------------------------------------------------------------------------
+
+
+def _sweep_best(rx, ry, rt, rid, rok, cx, cy, ct, cid, cok,
+                eps_sp, eps_t, bm: int, with_idx: bool):
+    """Running best-match over candidate-point slabs, VMEM-resident.
+
+    ``cx``/``cy``/``ct``/``cok``: [bc, Mc] block values; scanned in ``bm``
+    chunks with a (max, argmax) carry — the same contraction as the
+    materializing kernels' k grid axis, but kept entirely in registers.
+    Returns ``w [bp, bc]`` (and ``idx`` when ``with_idx``), where ties keep
+    the lowest candidate-point index (argmax-first, bit-identical to the
+    dense kernel's chunked accumulation).
+    """
+    bp = rx.shape[0]
+    bc, Mc = cx.shape
+
+    def chunk(k, carry):
+        cxk = jax.lax.dynamic_slice_in_dim(cx, k * bm, bm, axis=1)
+        cyk = jax.lax.dynamic_slice_in_dim(cy, k * bm, bm, axis=1)
+        ctk = jax.lax.dynamic_slice_in_dim(ct, k * bm, bm, axis=1)
+        cokk = jax.lax.dynamic_slice_in_dim(cok, k * bm, bm, axis=1)
+
+        dx = rx[:, None, None] - cxk[None, :, :]          # [bp, bc, bm]
+        dy = ry[:, None, None] - cyk[None, :, :]
+        dt = jnp.abs(rt[:, None, None] - ctk[None, :, :])
+        d2 = dx * dx + dy * dy
+
+        ok = (d2 <= eps_sp * eps_sp) & (dt <= eps_t)
+        ok &= rok[:, None, None] & cokk[None, :, :]
+        ok &= rid[:, None, None] != cid[None, :, None]
+
+        w = jnp.where(ok, 1.0 - jnp.sqrt(d2) / eps_sp, -1.0)
+
+        tile_w = jnp.max(w, axis=-1)                      # [bp, bc]
+        if with_idx:
+            run_w, run_idx = carry
+            tile_arg = jnp.argmax(w, axis=-1).astype(jnp.int32)
+            tile_idx = jnp.where(tile_w > 0.0, tile_arg + k * bm, -1)
+            tile_w = jnp.maximum(tile_w, 0.0)
+            better = tile_w > run_w
+            return (jnp.where(better, tile_w, run_w),
+                    jnp.where(better, tile_idx, run_idx))
+        return (jnp.maximum(jnp.maximum(tile_w, 0.0), carry[0]),)
+
+    init = (jnp.zeros((bp, bc), jnp.float32),)
+    if with_idx:
+        init = init + (jnp.full((bp, bc), -1, jnp.int32),)
+    out = jax.lax.fori_loop(0, Mc // bm, chunk, init)
+    return out if with_idx else out[0]
+
+
+def _run_refine(w, rt, rows: int, M: int, delta_t):
+    """In-kernel DTJ Refine (delta_t): zero matches in short runs.
+
+    ``w``: [bp, bc] best weights for ``rows`` whole trajectory rows of ``M``
+    points each (``bp == rows * M`` — the fused wrappers enforce row-aligned
+    ref blocks precisely so runs never cross a block boundary).  A run is a
+    maximal streak of consecutive matched ref points for one candidate; it
+    survives iff its time extent ``t[last] - t[first] >= delta_t``.  Because
+    ``t`` is ascending within a row, each point's run boundaries are the
+    latest start at-or-before it (forward cummax of start times) and the
+    earliest end at-or-after it (reverse cummin of end times) — no gather or
+    scatter, so the whole refine stays in VMEM.  Matches
+    ``repro.core.geometry.filter_delta_t`` exactly (delta_t == 0 is the
+    identity on matched points: every run has extent >= 0).
+    """
+    bp, bc = w.shape
+    m = w.reshape(rows, M, bc)
+    matched = m > 0.0
+    prev = jnp.pad(matched, ((0, 0), (1, 0), (0, 0)))[:, :M]
+    nxt = jnp.pad(matched, ((0, 0), (0, 1), (0, 0)))[:, 1:]
+    t3 = jnp.broadcast_to(rt.reshape(rows, M)[:, :, None], (rows, M, bc))
+    big = jnp.float32(3.4e38)
+    start_t = jax.lax.cummax(
+        jnp.where(matched & ~prev, t3, -big), axis=1)
+    end_t = jax.lax.cummin(
+        jnp.where(matched & ~nxt, t3, big), axis=1, reverse=True)
+    keep = matched & ((end_t - start_t) >= delta_t)
+    return jnp.where(keep, m, 0.0).reshape(bp, bc)
+
+
+def _vote_word_epilogue(w, shift_base, bc: int, out_vote, out_word, first_j,
+                        first_word):
+    """Fold a refined [bp, bc] tile into the vote / packed-word accumulators.
+
+    ``shift_base``: bit offset of this candidate block inside its uint32
+    word (``(j * bc) % 32``; ``bc`` divides 32, so a block never straddles a
+    word boundary).  Bits of distinct blocks are disjoint, so ``+=`` is OR.
+    """
+    @pl.when(first_j)
+    def _init_vote():
+        out_vote[...] = jnp.zeros_like(out_vote)
+
+    @pl.when(first_word)
+    def _init_word():
+        out_word[...] = jnp.zeros_like(out_word)
+
+    out_vote[...] += jnp.sum(w, axis=1)
+    weights = (jnp.uint32(1)
+               << (shift_base.astype(jnp.uint32)
+                   + jnp.arange(bc, dtype=jnp.uint32)))
+    bits = (w > 0.0).astype(jnp.uint32)
+    out_word[...] += jnp.sum(bits * weights[None, :], axis=1,
+                             keepdims=True)
+
+
+def _vote_kernel(ref_x, ref_y, ref_t, ref_id, ref_ok,
+                 cand_x, cand_y, cand_t, cand_id, cand_ok,
+                 eps, out_vote, *outs, rows: int, M: int, bc: int,
+                 bm: int):
+    """Dense pass 1; ``outs`` holds the packed-word ref only when the
+    caller needs TSA2 neighbor sets (vote-only otherwise)."""
+    j = pl.program_id(1)
+    w = _sweep_best(ref_x[...], ref_y[...], ref_t[...], ref_id[...],
+                    ref_ok[...], cand_x[...], cand_y[...], cand_t[...],
+                    cand_id[...], cand_ok[...], eps[0], eps[1], bm, False)
+    w = _run_refine(w, ref_t[...], rows, M, eps[2])
+    if outs:
+        _vote_word_epilogue(w, (j * bc) % 32, bc, out_vote, outs[0],
+                            j == 0, (j * bc) % 32 == 0)
+    else:
+        @pl.when(j == 0)
+        def _init_vote():
+            out_vote[...] = jnp.zeros_like(out_vote)
+
+        out_vote[...] += jnp.sum(w, axis=1)
+
+
+def _vote_kernel_pruned(ref_x, ref_y, ref_t, ref_id, ref_ok,
+                        cand_x, cand_y, cand_t, cand_id, cand_ok,
+                        tile_id, eps, out_vote, *outs, rows: int,
+                        M: int, bc: int, bm: int):
+    """Pruned-grid pass 1: grid (ref block i, surviving-tile slot s).
+
+    The candidate operands were gathered to ``[nRb, K, bc, Mc]`` (same
+    layout as ``stjoin_pallas_pruned``); dead slots carry ``cand_ok ==
+    False`` everywhere, so they contribute no votes and no bits.  The packed
+    word cannot be routed by an index map (the word column depends on the
+    *value* of ``tile_id``), so each slot emits its [bp] word contribution
+    at (i, s) and the wrapper scatter-adds it into the [nRb, bp, W] layout
+    (disjoint bit ranges -> add == OR).  ``outs`` is empty on the
+    vote-only (TSA1) path.
+    """
+    s = pl.program_id(1)
+    w = _sweep_best(ref_x[...], ref_y[...], ref_t[...], ref_id[...],
+                    ref_ok[...], cand_x[0, 0], cand_y[0, 0], cand_t[0, 0],
+                    cand_id[0, 0], cand_ok[0, 0], eps[0], eps[1], bm, False)
+    w = _run_refine(w, ref_t[...], rows, M, eps[2])
+
+    @pl.when(s == 0)
+    def _init_vote():
+        out_vote[...] = jnp.zeros_like(out_vote)
+
+    out_vote[...] += jnp.sum(w, axis=1)
+    if outs:
+        jt = jnp.maximum(tile_id[0, 0], 0)
+        weights = (jnp.uint32(1)
+                   << (((jt * bc) % 32).astype(jnp.uint32)
+                       + jnp.arange(bc, dtype=jnp.uint32)))
+        bits = (w > 0.0).astype(jnp.uint32)
+        outs[0][0, 0] = jnp.sum(bits * weights[None, :], axis=1)
+
+
+def _sim_epilogue(w, idx, ref_gid, cand_gid, out_sim, first):
+    """Scatter a refined tile into the [Sr+1, Sc+1] similarity accumulator.
+
+    Mirrors ``repro.core.similarity.similarity_matrix``: the destination is
+    the candidate *point*'s subtrajectory slot (gathered from ``cand_gid``
+    at the best-match index); unmatched / unsegmented entries go to the
+    sentinel row/column and are sliced off by the wrapper.  Weights are
+    already delta_t-refined, so a dropped match adds exactly 0.
+    """
+    bc, Mc = cand_gid.shape
+    sent_c = out_sim.shape[1] - 1
+
+    @pl.when(first)
+    def _init():
+        out_sim[...] = jnp.zeros_like(out_sim)
+
+    dstg = cand_gid[jnp.arange(bc)[None, :], jnp.clip(idx, 0, Mc - 1)]
+    dst = jnp.where((w > 0.0) & (idx >= 0), dstg, sent_c)    # [bp, bc]
+    src = jnp.broadcast_to(ref_gid[:, None], w.shape)
+    out_sim[...] = out_sim[...].at[src, dst].add(w)
+
+
+def _sim_kernel(ref_x, ref_y, ref_t, ref_id, ref_ok, ref_gid,
+                cand_x, cand_y, cand_t, cand_id, cand_ok, cand_gid,
+                eps, out_sim, *, rows: int, M: int, bc: int, bm: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    w, idx = _sweep_best(ref_x[...], ref_y[...], ref_t[...], ref_id[...],
+                         ref_ok[...], cand_x[...], cand_y[...], cand_t[...],
+                         cand_id[...], cand_ok[...], eps[0], eps[1], bm,
+                         True)
+    w = _run_refine(w, ref_t[...], rows, M, eps[2])
+    _sim_epilogue(w, idx, ref_gid[...], cand_gid[...], out_sim,
+                  (i == 0) & (j == 0))
+
+
+def _sim_kernel_pruned(ref_x, ref_y, ref_t, ref_id, ref_ok, ref_gid,
+                       cand_x, cand_y, cand_t, cand_id, cand_ok, cand_gid,
+                       eps, out_sim, *, rows: int, M: int, bc: int, bm: int):
+    i = pl.program_id(0)
+    s = pl.program_id(1)
+    w, idx = _sweep_best(ref_x[...], ref_y[...], ref_t[...], ref_id[...],
+                         ref_ok[...], cand_x[0, 0], cand_y[0, 0],
+                         cand_t[0, 0], cand_id[0, 0], cand_ok[0, 0],
+                         eps[0], eps[1], bm, True)
+    w = _run_refine(w, ref_t[...], rows, M, eps[2])
+    _sim_epilogue(w, idx, ref_gid[...], cand_gid[0, 0], out_sim,
+                  (i == 0) & (s == 0))
+
+
+def _fused_eps(eps_sp, eps_t, delta_t):
+    return jnp.stack([jnp.asarray(eps_sp, jnp.float32),
+                      jnp.asarray(eps_t, jnp.float32),
+                      jnp.asarray(delta_t, jnp.float32)])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows", "M", "bc", "bm", "with_words", "interpret"))
+def stjoin_vote_fused_flat(ref_x, ref_y, ref_t, ref_id, ref_ok,
+                           cand_x, cand_y, cand_t, cand_id, cand_ok,
+                           eps_sp, eps_t, delta_t, *, rows: int, M: int,
+                           bc: int = 8, bm: int = 128,
+                           with_words: bool = True,
+                           interpret: bool = True):
+    """Fused pass 1 over the dense tile grid.
+
+    Ref points are flattened ``[P]`` with ``P = n_rows_total * M`` and block
+    size ``bp = rows * M`` (whole trajectory rows per block — required by
+    the in-kernel delta_t refine).  Returns ``(vote [P] f32,
+    words [P, C/32] uint32 | None)``; C must be a multiple of 32 and ``bc``
+    a divisor of 32 so every candidate block lands inside one uint32 word.
+    ``with_words=False`` (the TSA1 path) skips the packed-word accumulator
+    entirely — no bit packing, no extra output traffic.
+    """
+    P = ref_x.shape[0]
+    C, Mc = cand_x.shape
+    bp = rows * M
+    assert P % bp == 0 and C % bc == 0 and Mc % bm == 0, (P, C, Mc, bp, bc, bm)
+    assert C % 32 == 0 and 32 % bc == 0, (C, bc)
+    W = C // 32
+
+    eps = _fused_eps(eps_sp, eps_t, delta_t)
+    grid = (P // bp, C // bc)
+    ref_spec = pl.BlockSpec((bp,), lambda i, j: (i,))
+    cand_spec = pl.BlockSpec((bc, Mc), lambda i, j: (j, 0))
+    cid_spec = pl.BlockSpec((bc,), lambda i, j: (j,))
+    eps_spec = pl.BlockSpec((3,), lambda i, j: (0,))
+
+    out_specs = [pl.BlockSpec((bp,), lambda i, j: (i,))]
+    out_shape = [jax.ShapeDtypeStruct((P,), jnp.float32)]
+    if with_words:
+        out_specs.append(
+            pl.BlockSpec((bp, 1), lambda i, j: (i, (j * bc) // 32)))
+        out_shape.append(jax.ShapeDtypeStruct((P, W), jnp.uint32))
+
+    out = pl.pallas_call(
+        functools.partial(_vote_kernel, rows=rows, M=M, bc=bc, bm=bm),
+        grid=grid,
+        in_specs=[ref_spec] * 5 + [cand_spec] * 3 + [cid_spec, cand_spec,
+                                                     eps_spec],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(ref_x, ref_y, ref_t, ref_id.astype(jnp.int32),
+      ref_ok.astype(jnp.bool_), cand_x, cand_y, cand_t,
+      cand_id.astype(jnp.int32), cand_ok.astype(jnp.bool_), eps)
+    return (out[0], out[1]) if with_words else (out[0], None)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows", "M", "bc", "bm", "with_words", "interpret"))
+def stjoin_vote_fused_pruned_flat(ref_x, ref_y, ref_t, ref_id, ref_ok,
+                                  cand_x, cand_y, cand_t, cand_id, cand_ok,
+                                  tile_ids, eps_sp, eps_t, delta_t, *,
+                                  rows: int, M: int, bc: int = 8,
+                                  bm: int = 128, with_words: bool = True,
+                                  interpret: bool = True):
+    """Fused pass 1 over the index-pruned tile plan (``tile_ids [nRb, K]``).
+
+    Same gather layout as ``stjoin_pallas_pruned``; only surviving tiles are
+    swept, yet the outputs are the full dense-equivalent accumulators
+    (pruning is conservative, so skipped tiles contribute exactly 0).
+    ``with_words=False`` skips the packed-word contributions and scatter.
+    """
+    P = ref_x.shape[0]
+    C, Mc = cand_x.shape
+    bp = rows * M
+    nRb = P // bp
+    nCb = C // bc
+    K = tile_ids.shape[1]
+    assert P % bp == 0 and C % bc == 0 and Mc % bm == 0, (P, C, Mc, bp, bc, bm)
+    assert C % 32 == 0 and 32 % bc == 0, (C, bc)
+    assert tile_ids.shape[0] == nRb, (tile_ids.shape, nRb)
+    W = C // 32
+
+    live = tile_ids >= 0                                    # [nRb, K]
+    safe = jnp.clip(tile_ids, 0, nCb - 1)
+    gather = lambda a: a.reshape(nCb, bc, Mc)[safe]         # [nRb, K, bc, Mc]
+    gx, gy, gt = gather(cand_x), gather(cand_y), gather(cand_t)
+    gok = gather(cand_ok.astype(jnp.bool_)) & live[:, :, None, None]
+    gid = cand_id.astype(jnp.int32).reshape(nCb, bc)[safe]  # [nRb, K, bc]
+
+    eps = _fused_eps(eps_sp, eps_t, delta_t)
+    grid = (nRb, K)
+    ref_spec = pl.BlockSpec((bp,), lambda i, s: (i,))
+    cand_spec = pl.BlockSpec((1, 1, bc, Mc), lambda i, s: (i, s, 0, 0))
+    cid_spec = pl.BlockSpec((1, 1, bc), lambda i, s: (i, s, 0))
+    tid_spec = pl.BlockSpec((1, 1), lambda i, s: (i, s))
+    eps_spec = pl.BlockSpec((3,), lambda i, s: (0,))
+
+    out_specs = [pl.BlockSpec((bp,), lambda i, s: (i,))]
+    out_shape = [jax.ShapeDtypeStruct((P,), jnp.float32)]
+    if with_words:
+        out_specs.append(pl.BlockSpec((1, 1, bp), lambda i, s: (i, s, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((nRb, K, bp), jnp.uint32))
+
+    out = pl.pallas_call(
+        functools.partial(_vote_kernel_pruned, rows=rows, M=M, bc=bc, bm=bm),
+        grid=grid,
+        in_specs=[ref_spec] * 5 + [cand_spec] * 3 + [cid_spec, cand_spec,
+                                                     tid_spec, eps_spec],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(ref_x, ref_y, ref_t, ref_id.astype(jnp.int32),
+      ref_ok.astype(jnp.bool_), gx, gy, gt, gid, gok,
+      tile_ids.astype(jnp.int32), eps)
+    if not with_words:
+        return out[0], None
+    vote, contrib = out
+
+    # host-side word scatter: slot s of ref block i carries the bits of
+    # candidate block tile_ids[i, s]; distinct slots of one word hold
+    # disjoint bit ranges, so scatter-add == OR.  Dead slots -> dummy col W.
+    word_col = jnp.where(live, (safe * bc) // 32, W)        # [nRb, K]
+    rows_ix = jnp.arange(nRb, dtype=jnp.int32)[:, None]
+    words = jnp.zeros((nRb, W + 1, bp), jnp.uint32)
+    words = words.at[rows_ix, word_col].add(contrib, mode="drop")
+    words = words[:, :W].transpose(0, 2, 1).reshape(P, W)
+    return vote, words
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows", "M", "bc", "bm", "n_src", "n_dst", "interpret"))
+def stjoin_sim_fused_flat(ref_x, ref_y, ref_t, ref_id, ref_ok, ref_gid,
+                          cand_x, cand_y, cand_t, cand_id, cand_ok, cand_gid,
+                          eps_sp, eps_t, delta_t, *, rows: int, M: int,
+                          n_src: int, n_dst: int, bc: int = 8, bm: int = 128,
+                          interpret: bool = True):
+    """Fused pass 2 (dense grid): raw similarity scatter ``[n_src, n_dst]``.
+
+    ``ref_gid [P]``: subtrajectory slot of each ref point (``n_src`` =
+    sentinel for unsegmented/padding).  ``cand_gid [C, Mc]``: slot of each
+    candidate *point* (``n_dst`` sentinel).  Returns the un-normalized
+    scatter of refined best-match weights — ``similarity_matrix``'s ``raw``
+    — with the sentinel row/column already sliced off.
+
+    Capacity note: the whole ``[n_src+1, n_dst+1]`` accumulator is one
+    revisited output block, so on real TPU (interpret=False) ``S`` is
+    capped by VMEM (~16 MiB -> S up to ~2000 slots f32).  Beyond that,
+    tile the accumulator columns and run one sweep per column block — the
+    distributed ``sim_strategy="allgather"`` path already has exactly that
+    shape (each model rank owns an ``[S, S/m]`` block); on one chip the
+    same column loop applies.  CPU interpret (the correctness path) has no
+    such cap.
+    """
+    P = ref_x.shape[0]
+    C, Mc = cand_x.shape
+    bp = rows * M
+    assert P % bp == 0 and C % bc == 0 and Mc % bm == 0, (P, C, Mc, bp, bc, bm)
+
+    eps = _fused_eps(eps_sp, eps_t, delta_t)
+    grid = (P // bp, C // bc)
+    ref_spec = pl.BlockSpec((bp,), lambda i, j: (i,))
+    cand_spec = pl.BlockSpec((bc, Mc), lambda i, j: (j, 0))
+    cid_spec = pl.BlockSpec((bc,), lambda i, j: (j,))
+    eps_spec = pl.BlockSpec((3,), lambda i, j: (0,))
+
+    raw = pl.pallas_call(
+        functools.partial(_sim_kernel, rows=rows, M=M, bc=bc, bm=bm),
+        grid=grid,
+        in_specs=[ref_spec] * 5 + [ref_spec] + [cand_spec] * 3
+        + [cid_spec, cand_spec, cand_spec, eps_spec],
+        out_specs=pl.BlockSpec((n_src + 1, n_dst + 1), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_src + 1, n_dst + 1), jnp.float32),
+        interpret=interpret,
+    )(ref_x, ref_y, ref_t, ref_id.astype(jnp.int32),
+      ref_ok.astype(jnp.bool_), ref_gid.astype(jnp.int32),
+      cand_x, cand_y, cand_t, cand_id.astype(jnp.int32),
+      cand_ok.astype(jnp.bool_), cand_gid.astype(jnp.int32), eps)
+    return raw[:n_src, :n_dst]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows", "M", "bc", "bm", "n_src", "n_dst", "interpret"))
+def stjoin_sim_fused_pruned_flat(ref_x, ref_y, ref_t, ref_id, ref_ok,
+                                 ref_gid, cand_x, cand_y, cand_t, cand_id,
+                                 cand_ok, cand_gid, tile_ids, eps_sp, eps_t,
+                                 delta_t, *, rows: int, M: int, n_src: int,
+                                 n_dst: int, bc: int = 8, bm: int = 128,
+                                 interpret: bool = True):
+    """Fused pass 2 over the index-pruned tile plan (same plan as pass 1)."""
+    P = ref_x.shape[0]
+    C, Mc = cand_x.shape
+    bp = rows * M
+    nRb = P // bp
+    nCb = C // bc
+    K = tile_ids.shape[1]
+    assert P % bp == 0 and C % bc == 0 and Mc % bm == 0, (P, C, Mc, bp, bc, bm)
+    assert tile_ids.shape[0] == nRb, (tile_ids.shape, nRb)
+
+    live = tile_ids >= 0
+    safe = jnp.clip(tile_ids, 0, nCb - 1)
+    gather = lambda a: a.reshape(nCb, bc, Mc)[safe]
+    gx, gy, gt = gather(cand_x), gather(cand_y), gather(cand_t)
+    gok = gather(cand_ok.astype(jnp.bool_)) & live[:, :, None, None]
+    gid = cand_id.astype(jnp.int32).reshape(nCb, bc)[safe]
+    ggid = gather(cand_gid.astype(jnp.int32))
+
+    eps = _fused_eps(eps_sp, eps_t, delta_t)
+    grid = (nRb, K)
+    ref_spec = pl.BlockSpec((bp,), lambda i, s: (i,))
+    cand_spec = pl.BlockSpec((1, 1, bc, Mc), lambda i, s: (i, s, 0, 0))
+    cid_spec = pl.BlockSpec((1, 1, bc), lambda i, s: (i, s, 0))
+    eps_spec = pl.BlockSpec((3,), lambda i, s: (0,))
+
+    raw = pl.pallas_call(
+        functools.partial(_sim_kernel_pruned, rows=rows, M=M, bc=bc, bm=bm),
+        grid=grid,
+        in_specs=[ref_spec] * 5 + [ref_spec] + [cand_spec] * 3
+        + [cid_spec, cand_spec, cand_spec, eps_spec],
+        out_specs=pl.BlockSpec((n_src + 1, n_dst + 1), lambda i, s: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_src + 1, n_dst + 1), jnp.float32),
+        interpret=interpret,
+    )(ref_x, ref_y, ref_t, ref_id.astype(jnp.int32),
+      ref_ok.astype(jnp.bool_), ref_gid.astype(jnp.int32),
+      gx, gy, gt, gid, gok, ggid, eps)
+    return raw[:n_src, :n_dst]
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("bp", "bc", "bm", "interpret"))

@@ -313,3 +313,109 @@ def collective_bytes(hlo_text: str) -> dict:
     out = dict(res["collectives"])
     out["total_bytes"] = res["collective_bytes"]
     return out
+
+
+# ---------------------------------------------------------------------------
+# Buffer-assignment inspection: which arrays does a compiled program actually
+# hold?  Used by benchmarks/kernel_bench.py to verify that the fused join
+# epilogues never materialize the [T, M, C] JoinResult cube and to estimate
+# per-stage peak allocations on backends where ``memory_analysis()`` is
+# unavailable (CPU).
+# ---------------------------------------------------------------------------
+
+
+def _type_buffers(type_str: str) -> list[dict]:
+    """Array components of one HLO type string (tuples yield one entry
+    each): ``{"dtype", "dims", "shape", "elements", "bytes"}``."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        dlist = _dims(dims)
+        n = 1
+        for d in dlist:
+            n *= d
+        out.append({"dtype": dt, "dims": dlist,
+                    "shape": "x".join(map(str, dlist)),
+                    "elements": n, "bytes": n * _DTYPE_BYTES[dt]})
+    return out
+
+
+def buffer_inventory(hlo_text: str) -> list[dict]:
+    """Every instruction-output buffer in a (post-optimization) HLO module.
+
+    Tuple-typed outputs contribute one entry per component.  Returns
+    ``[{"dtype", "dims", "shape", "elements", "bytes"}]`` unsorted;
+    parameters are included (they are live allocations of the executable).
+    """
+    out = []
+    for raw in hlo_text.splitlines():
+        dm = _DEF_RE.match(raw.strip())
+        if not dm:
+            continue
+        out.extend(_type_buffers(dm.group(2)))
+    return out
+
+
+def peak_buffer_stats(hlo_text: str, top: int = 5) -> dict:
+    """Largest single buffer (the peak-allocation lower bound a program can
+    never beat) plus the top-``top`` buffers for context."""
+    inv = sorted(buffer_inventory(hlo_text), key=lambda b: -b["bytes"])
+    if not inv:
+        return {"largest_bytes": 0, "largest": None, "top": []}
+    fmt = lambda b: {"dtype": b["dtype"], "shape": b["shape"],
+                     "bytes": b["bytes"]}
+    return {"largest_bytes": inv[0]["bytes"], "largest": fmt(inv[0]),
+            "top": [fmt(b) for b in inv[:top]]}
+
+
+def find_buffers_with_elements(hlo_text: str, elements: int,
+                               dtypes=("f32", "s32")) -> list[dict]:
+    """Buffers of the given dtypes holding exactly ``elements`` entries —
+    the shape-agnostic fingerprint of a materialized join cube (it may
+    appear as [T, M, C], [T*M, C], or flattened)."""
+    return [b for b in buffer_inventory(hlo_text)
+            if b["dtype"] in dtypes and b["elements"] == elements]
+
+
+def interface_buffer_stats(hlo_text: str, top: int = 5) -> dict:
+    """Parameter and ROOT-output buffers of the ENTRY computation.
+
+    These are the arrays that necessarily live in HBM across the program
+    boundary — the honest cross-stage footprint.  Loop-body temporaries
+    (e.g. the ``[bp, bc, bm]`` pairwise block a Pallas grid step holds)
+    are excluded: on TPU they are VMEM scratch; the CPU interpret lowering
+    merely makes them visible as internal HLO buffers.
+    """
+    in_entry = False
+    bufs: list[dict] = []
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if line.endswith("{") and "(" in line and "=" not in line.split(
+                "(")[0]:
+            m = _COMP_HDR.match(line)
+            if m:
+                in_entry = bool(m.group(1))
+                continue
+        if line.startswith("}"):
+            in_entry = False
+            continue
+        if not in_entry:
+            continue
+        dm = _DEF_RE.match(line)
+        if not dm:
+            continue
+        is_root = line.startswith("ROOT")
+        if dm.group(3) != "parameter" and not is_root:
+            continue
+        kind = "param" if dm.group(3) == "parameter" else "output"
+        for b in _type_buffers(dm.group(2)):
+            bufs.append({"kind": kind, "dtype": b["dtype"],
+                         "shape": b["shape"], "bytes": b["bytes"]})
+    bufs.sort(key=lambda b: -b["bytes"])
+    return {
+        "largest_bytes": bufs[0]["bytes"] if bufs else 0,
+        "largest": bufs[0] if bufs else None,
+        "total_bytes": sum(b["bytes"] for b in bufs),
+        "top": bufs[:top],
+    }

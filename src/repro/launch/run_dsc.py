@@ -39,8 +39,14 @@ def main(argv=None):
     ap.add_argument("--model-par", type=int, default=1)
     ap.add_argument("--use-kernel", action="store_true")
     ap.add_argument("--use-index", action="store_true",
-                    help="prune the distributed JOIN phase with the "
-                         "spatiotemporal grid index (lossless)")
+                    help="prune the JOIN phase with the spatiotemporal "
+                         "grid index (lossless; single-host and "
+                         "distributed)")
+    ap.add_argument("--mode", default="materialize",
+                    choices=["materialize", "fused"],
+                    help="join execution mode: materialize the JoinResult "
+                         "cube (parity oracle) or stream it through the "
+                         "fused Pallas epilogues (no [T, M, C] buffer)")
     ap.add_argument("--segmentation", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -72,7 +78,8 @@ def main(argv=None):
         parts = partition_batch(batch, P)
         out = run_dsc_distributed(parts, params, mesh,
                                   use_kernel=args.use_kernel,
-                                  use_index=args.use_index)
+                                  use_index=args.use_index,
+                                  mode=args.mode)
         res, table = out.result, out.table
         n_rep = int(np.asarray(res.is_rep).sum())
         n_out = int(np.asarray(res.is_outlier).sum())
@@ -82,7 +89,8 @@ def main(argv=None):
                  "%d clusters, %d members, %d outliers in %.2fs",
                  P, args.model_par, n_rep, n_mem, n_out, time.time() - t0)
     else:
-        out = run_dsc(batch, params, use_kernel=args.use_kernel)
+        out = run_dsc(batch, params, use_kernel=args.use_kernel,
+                      use_index=args.use_index, mode=args.mode)
         s = cluster_summary(out)
         log.info("DSC: %d clusters, %d outliers, RMSE %.4f, SSCR %.2f "
                  "in %.2fs", s["num_clusters"], len(s["outliers"]),

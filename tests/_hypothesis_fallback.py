@@ -11,6 +11,7 @@ instead of hypothesis' adaptive search.
 Only the tiny surface the test-suite uses is provided:
 
 * ``strategies.integers(lo, hi)``
+* ``strategies.sampled_from(elements)``
 * ``@given(*strategies)`` — runs the test body for ``_NUM_EXAMPLES``
   deterministic draws (seeded per test name, so failures reproduce)
 * ``@settings(...)`` — accepted and ignored
@@ -34,6 +35,18 @@ class _IntegersStrategy:
 
 def integers(min_value: int, max_value: int) -> _IntegersStrategy:
     return _IntegersStrategy(min_value, max_value)
+
+
+class _SampledFromStrategy:
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def example(self, rng: random.Random):
+        return rng.choice(self.elements)
+
+
+def sampled_from(elements) -> _SampledFromStrategy:
+    return _SampledFromStrategy(elements)
 
 
 def given(*strats):
@@ -62,6 +75,7 @@ def build_module() -> types.ModuleType:
     mod = types.ModuleType("hypothesis")
     st = types.ModuleType("hypothesis.strategies")
     st.integers = integers
+    st.sampled_from = sampled_from
     mod.given = given
     mod.settings = settings
     mod.strategies = st

@@ -80,6 +80,13 @@ _DRIVER = textwrap.dedent("""
     report["p4_index_agree"] = float(
         (np.asarray(out_i.result.member_of) == member_of).mean())
 
+    # fused streaming mode: identical clusters with no per-rank join cube
+    out_f = run_dsc_distributed(parts, params, mesh, mode="fused")
+    report["p4_fused_agree"] = float(
+        (np.asarray(out_f.result.member_of) == member_of).mean())
+    report["p4_fused_vote_close"] = bool(np.allclose(
+        np.asarray(out_f.vote), np.asarray(out.vote), atol=1e-4))
+
     print("JSON" + json.dumps(report))
 """)
 
@@ -123,6 +130,14 @@ def test_p4_kernel_path(dist_report):
 def test_p4_index_pruned_join_agrees(dist_report):
     """use_index=True (halo bbox buckets + pair pruning) is lossless."""
     assert dist_report["p4_index_agree"] == 1.0
+
+
+@pytest.mark.distributed
+@pytest.mark.slow
+def test_p4_fused_streaming_agrees(dist_report):
+    """mode="fused" (no per-rank join cube) matches the materializing run."""
+    assert dist_report["p4_fused_agree"] == 1.0
+    assert dist_report["p4_fused_vote_close"]
 
 
 def test_partitioning_is_equi_depth():

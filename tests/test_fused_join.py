@@ -1,0 +1,211 @@
+"""Fused streaming join (epilogue fusion) vs the materializing oracle.
+
+The fused kernels never build the [T, M, C] JoinResult cube; these tests pin
+their three accumulators — vote sums (Eq. 4), bit-packed neighbor words
+(Alg. 3 input), and the raw similarity scatter (Eq. 2) — against the
+materializing reference path, including delta_t refinement, all-padding
+rows, and shapes that leave ragged last tiles after padding.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import geometry, segmentation, similarity, voting
+from repro.core.dsc import run_dsc
+from repro.core.types import DSCParams, TrajectoryBatch
+from repro.kernels.stjoin import ops as stjoin_ops
+
+
+def _rand_batch(rng, T, M, pad_row=None):
+    x = rng.uniform(0, 10, (T, M)).astype(np.float32)
+    y = rng.uniform(0, 10, (T, M)).astype(np.float32)
+    t = np.sort(rng.uniform(0, 50, (T, M)), axis=1).astype(np.float32)
+    v = rng.uniform(0, 1, (T, M)) > 0.15
+    ids = np.arange(T, dtype=np.int32)
+    if pad_row is not None:
+        v[pad_row] = False
+        ids[pad_row] = -1
+    return TrajectoryBatch(x=jnp.asarray(x), y=jnp.asarray(y),
+                           t=jnp.asarray(t), valid=jnp.asarray(v),
+                           traj_id=jnp.asarray(ids))
+
+
+def _reference(ref, cand, eps_sp, eps_t, delta_t):
+    join = geometry.subtrajectory_join(ref, cand, eps_sp, eps_t, delta_t)
+    return (join, voting.point_voting(join),
+            voting.neighbor_mask_packed(join))
+
+
+def _reference_raw_sim(join, ref_seg, cand_seg, max_subs):
+    """Un-normalized SP scatter straight from the cube (cross-join form)."""
+    T, M, C = join.best_w.shape
+    Mc = cand_seg.sub_local.shape[1]
+    n_src, n_dst = T * max_subs, C * max_subs
+    src = jnp.where(ref_seg.sub_local >= 0,
+                    jnp.arange(T)[:, None] * max_subs + ref_seg.sub_local,
+                    n_src)
+    src = jnp.broadcast_to(src[:, :, None], (T, M, C))
+    idx = jnp.clip(join.best_idx, 0, Mc - 1)
+    csub = cand_seg.sub_local[jnp.arange(C)[None, None, :], idx]
+    dst = jnp.where((join.best_idx >= 0) & (csub >= 0),
+                    jnp.arange(C)[None, None, :] * max_subs + csub, n_dst)
+    raw = jnp.zeros((n_src + 1, n_dst + 1), jnp.float32)
+    raw = raw.at[src.reshape(-1), dst.reshape(-1)].add(
+        join.best_w.reshape(-1))
+    return raw[:n_src, :n_dst]
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([0.0, 4.0, 20.0]))
+@settings(max_examples=8, deadline=None)
+def test_fused_vote_and_masks_match_reference(seed, delta_t):
+    rng = np.random.default_rng(seed)
+    b = _rand_batch(rng, 5, 20, pad_row=int(seed) % 5)
+    join, want_vote, want_words = _reference(b, b, 2.5, 12.0, delta_t)
+    vote, words = stjoin_ops.stjoin_vote_fused(
+        b, b, 2.5, 12.0, delta_t, rows=2, bc=2, bm=8)
+    np.testing.assert_allclose(np.asarray(vote), np.asarray(want_vote),
+                               atol=1e-5)
+    assert (np.asarray(words) == np.asarray(want_words)).all()
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=6, deadline=None)
+def test_fused_pruned_matches_dense_fused(seed):
+    """The index-pruned fused sweep is lossless (conservative pruning)."""
+    rng = np.random.default_rng(seed)
+    b = _rand_batch(rng, 6, 16)
+    _, want_vote, want_words = _reference(b, b, 2.0, 10.0, 3.0)
+    tiles = stjoin_ops.plan_fused_tiles(
+        b.x, b.y, b.t, b.valid, b.x, b.y, b.t, b.valid, 2.0, 10.0,
+        rows=2, bc=2, bm=8)
+    vote, words = stjoin_ops.stjoin_vote_fused_arrays(
+        b.x, b.y, b.t, b.valid, b.traj_id,
+        b.x, b.y, b.t, b.valid, b.traj_id,
+        2.0, 10.0, 3.0, rows=2, bc=2, bm=8, tile_ids=tiles)
+    np.testing.assert_allclose(np.asarray(vote), np.asarray(want_vote),
+                               atol=1e-5)
+    assert (np.asarray(words) == np.asarray(want_words)).all()
+
+
+@pytest.mark.parametrize("T,M,C,Mc,rows,bc,bm,delta_t", [
+    (5, 17, 7, 13, 3, 8, 8, 0.0),      # everything ragged
+    (5, 17, 7, 13, 3, 8, 8, 7.0),
+    (3, 40, 35, 11, 2, 32, 128, 0.0),  # bc == word width; bm > Mc
+    (4, 8, 4, 8, 8, 4, 4, 7.0),        # rows > T (whole batch one block)
+])
+def test_fused_sim_matches_reference_cross_join(T, M, C, Mc, rows, bc, bm,
+                                                delta_t):
+    """Pass 2 against the cube scatter, with independent candidate-side
+    segmentation (the cross-join form the distributed pipeline uses)."""
+    rng = np.random.default_rng(T * 1000 + C)
+    b = _rand_batch(rng, T, M, pad_row=0)
+    c = _rand_batch(rng, C, Mc)
+    max_subs = 4
+    join, vote, _ = _reference(b, c, 2.5, 12.0, delta_t)
+    cjoin, cvote, _ = _reference(c, c, 2.5, 12.0, delta_t)
+    seg = segmentation.tsa1(
+        voting.normalized_voting(vote, b.valid), b.valid, 3, 0.1, max_subs)
+    cseg = segmentation.tsa1(
+        voting.normalized_voting(cvote, c.valid), c.valid, 3, 0.1, max_subs)
+    want = _reference_raw_sim(join, seg, cseg, max_subs)
+    raw = stjoin_ops.stjoin_sim_fused(
+        b, c, seg.sub_local, cseg.sub_local, max_subs, 2.5, 12.0, delta_t,
+        rows=rows, bc=bc, bm=bm)
+    np.testing.assert_allclose(np.asarray(raw), np.asarray(want), atol=1e-5)
+
+    tiles = stjoin_ops.plan_fused_tiles(
+        b.x, b.y, b.t, b.valid, c.x, c.y, c.t, c.valid, 2.5, 12.0,
+        rows=rows, bc=bc, bm=bm)
+    raw_p = stjoin_ops.stjoin_sim_fused(
+        b, c, seg.sub_local, cseg.sub_local, max_subs, 2.5, 12.0, delta_t,
+        tile_ids=tiles, rows=rows, bc=bc, bm=bm)
+    np.testing.assert_allclose(np.asarray(raw_p), np.asarray(want),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(mode="fused"),
+    dict(mode="fused", use_index=True),
+])
+def test_run_dsc_fused_matches_materializing(fig1, fig1_params, kw):
+    """Acceptance: identical clustering output, sim allclose, no join cube."""
+    batch, _ = fig1
+    a = run_dsc(batch, fig1_params)
+    b = run_dsc(batch, fig1_params, **kw)
+    assert b.join is None
+    assert (np.asarray(a.result.member_of)
+            == np.asarray(b.result.member_of)).all()
+    assert (np.asarray(a.result.is_rep) == np.asarray(b.result.is_rep)).all()
+    assert (np.asarray(a.result.is_outlier)
+            == np.asarray(b.result.is_outlier)).all()
+    np.testing.assert_allclose(np.asarray(a.sim), np.asarray(b.sim),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(a.vote), np.asarray(b.vote),
+                               atol=1e-4)
+
+
+def test_run_dsc_fused_tsa1_delta_t(fig1):
+    """Fused mode with TSA1 segmentation and an active delta_t refine."""
+    batch, _ = fig1
+    params = DSCParams(eps_sp=0.42, eps_t=1.0, delta_t=0.3, w=6, tau=0.15,
+                       alpha_sigma=-1.0, k_sigma=-1.0, segmentation="tsa1")
+    a = run_dsc(batch, params)
+    b = run_dsc(batch, params, mode="fused")
+    assert (np.asarray(a.result.member_of)
+            == np.asarray(b.result.member_of)).all()
+    np.testing.assert_allclose(np.asarray(a.sim), np.asarray(b.sim),
+                               atol=1e-5)
+
+
+def test_fused_vote_only_skips_masks():
+    """with_masks=False (the TSA1 path) returns (vote, None) — identical
+    votes, no packed-word accumulator built at all."""
+    rng = np.random.default_rng(11)
+    b = _rand_batch(rng, 5, 20)
+    want_vote, _ = stjoin_ops.stjoin_vote_fused(
+        b, b, 2.5, 12.0, 3.0, rows=2, bc=2, bm=8)
+    vote, words = stjoin_ops.stjoin_vote_fused(
+        b, b, 2.5, 12.0, 3.0, rows=2, bc=2, bm=8, with_masks=False)
+    assert words is None
+    np.testing.assert_allclose(np.asarray(vote), np.asarray(want_vote),
+                               atol=1e-6)
+    tiles = stjoin_ops.plan_fused_tiles(
+        b.x, b.y, b.t, b.valid, b.x, b.y, b.t, b.valid, 2.5, 12.0,
+        rows=2, bc=2, bm=8)
+    vote_p, words_p = stjoin_ops.stjoin_vote_fused_arrays(
+        b.x, b.y, b.t, b.valid, b.traj_id,
+        b.x, b.y, b.t, b.valid, b.traj_id,
+        2.5, 12.0, 3.0, rows=2, bc=2, bm=8, tile_ids=tiles,
+        with_masks=False)
+    assert words_p is None
+    np.testing.assert_allclose(np.asarray(vote_p), np.asarray(want_vote),
+                               atol=1e-6)
+
+
+def test_fused_tile_plan_geometry_mismatch_rejected():
+    """A plan reused under a different tile geometry would mis-address
+    candidate blocks; the sweep must reject it instead of silently
+    dropping candidates."""
+    rng = np.random.default_rng(13)
+    b = _rand_batch(rng, 6, 16)
+    plan = stjoin_ops.plan_fused_tiles(
+        b.x, b.y, b.t, b.valid, b.x, b.y, b.t, b.valid, 2.0, 10.0,
+        rows=2, bc=2, bm=8)
+    with pytest.raises(ValueError, match="geometry"):
+        stjoin_ops.stjoin_vote_fused_arrays(
+            b.x, b.y, b.t, b.valid, b.traj_id,
+            b.x, b.y, b.t, b.valid, b.traj_id,
+            2.0, 10.0, 0.0, rows=2, bc=4, bm=8, tile_ids=plan)
+
+
+def test_fused_all_invalid_batch():
+    """Degenerate input: no valid points anywhere -> zero accumulators."""
+    T, M = 3, 12
+    z = jnp.zeros((T, M), jnp.float32)
+    b = TrajectoryBatch(x=z, y=z, t=z, valid=jnp.zeros((T, M), bool),
+                        traj_id=jnp.full((T,), -1, jnp.int32))
+    vote, words = stjoin_ops.stjoin_vote_fused(b, b, 1.0, 1.0, 0.0,
+                                               rows=2, bc=2, bm=4)
+    assert (np.asarray(vote) == 0).all()
+    assert (np.asarray(words) == 0).all()

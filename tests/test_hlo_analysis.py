@@ -4,11 +4,46 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.hlo_analysis import (
+    analyze_hlo,
+    buffer_inventory,
+    find_buffers_with_elements,
+    interface_buffer_stats,
+    peak_buffer_stats,
+)
 
 
 def _hlo(fn, *args):
     return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_buffer_inventory_sees_program_arrays():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 64), jnp.float32)
+    text = _hlo(lambda x, y: x @ y, a, b)
+    inv = buffer_inventory(text)
+    sizes = {b["bytes"] for b in inv}
+    assert 128 * 256 * 4 in sizes          # parameter
+    assert 128 * 64 * 4 in sizes           # output
+    assert peak_buffer_stats(text)["largest_bytes"] >= 128 * 256 * 4
+
+
+def test_find_buffers_with_elements_fingerprint():
+    a = jnp.zeros((16, 32), jnp.float32)
+    text = _hlo(lambda x: x[:, :, None] * jnp.ones((16, 32, 8)), a)
+    assert find_buffers_with_elements(text, 16 * 32 * 8, ("f32",))
+    assert not find_buffers_with_elements(text, 12345, ("f32",))
+
+
+def test_interface_buffer_stats_params_and_root():
+    a = jnp.zeros((64, 64), jnp.float32)
+    b = jnp.zeros((64, 16), jnp.float32)
+    stats = interface_buffer_stats(_hlo(lambda x, y: x @ y, a, b))
+    kinds = {t["kind"] for t in stats["top"]}
+    assert kinds == {"param", "output"}
+    # params (16K + 4K) + output (4K); internal temporaries excluded
+    assert stats["total_bytes"] == 64 * 64 * 4 + 2 * 64 * 16 * 4
+    assert stats["largest_bytes"] == 64 * 64 * 4
 
 
 def test_single_dot_flops():

@@ -4,7 +4,8 @@ import pytest
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
-from repro.core.segmentation import tsa1, tsa2
+from repro.core.segmentation import (_window_overlap_counts, _windowed_union,
+                                     tsa1, tsa2)
 from repro.core.voting import neighbor_mask_packed
 from repro.core.types import JoinResult
 
@@ -88,6 +89,26 @@ def test_tsa2_partition_validity(seed):
         labs = sl[r][v[r]]
         assert labs[0] == 0
         assert (np.diff(labs) >= 0).all() and (np.diff(labs) <= 1).all()
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_tsa2_bitplane_chunking_matches_full_expansion(seed):
+    """Regression for the TSA2 reference-path memory blow-up: the chunked
+    per-word inter/union accumulation must equal the all-at-once
+    ``[T, M, W*32]`` expansion bit for bit."""
+    rng = np.random.default_rng(seed)
+    T, M, W, w = 2, 36, 3, 5
+    masks = jnp.asarray(rng.integers(0, 2 ** 31, (T, M, W)).astype(np.uint32))
+    inter, union = _window_overlap_counts(masks, w)
+
+    n = jnp.arange(M)
+    l1 = _windowed_union(masks, n - w, n - 1)        # full [T, M, W*32]
+    l2 = _windowed_union(masks, n, n + w - 1)
+    want_inter = np.asarray(jnp.sum(l1 & l2, axis=-1))
+    want_union = np.asarray(jnp.sum(l1 | l2, axis=-1))
+    assert (np.asarray(inter) == want_inter).all()
+    assert (np.asarray(union) == want_union).all()
 
 
 def test_max_subs_clipping():
