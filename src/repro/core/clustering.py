@@ -11,22 +11,49 @@ never claimed by later representatives.
 ``alpha`` and ``k`` resolve per partition from the similarity / voting
 distribution as ``mean + sigma * std`` (paper Sec. 6.1) unless absolute
 overrides are provided.
+
+Engines (DESIGN.md §6)
+----------------------
+* ``engine="sequential"`` — the literal Algorithm 4 transcription: an O(S)
+  ``fori_loop`` of data-dependent steps, one ``dynamic_slice`` row of the
+  dense ``[S, S]`` matrix per visited slot.  Kept as the parity oracle.
+* ``engine="rounds"``     — the round-parallel formulation (default): the
+  serial loop only exists to decide the *representative set*, and that
+  decision for slot ``s`` depends solely on earlier-visited slots ``u``
+  with ``Sim[u, s] >= alpha`` (the slots that could claim ``s`` first).
+  Each round therefore resolves EVERY still-undecided slot with no
+  undecided predecessor at once; membership afterwards is one vectorized
+  claim-max over representative rows.  O(rounds) iterations, rounds
+  typically ≪ S.  Label-identical to the oracle (pinned by
+  ``tests/test_cluster_rounds.py``).
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.types import ClusteringResult, DSCParams, SubtrajTable
+from repro.kernels.cluster.ref import claim_max_ref
 
 
 def resolve_thresholds(params: DSCParams, sim: jnp.ndarray,
                        table: SubtrajTable):
-    """Absolute (alpha, k) from sigma-relative settings (Sec. 6.1)."""
+    """Absolute (alpha, k) from sigma-relative settings (Sec. 6.1).
+
+    The similarity statistics come from ONE masked pass over the ``[S, S]``
+    matrix: count, sum and sum-of-squares accumulate together and the
+    variance is ``E[x^2] - E[x]^2`` — numerically safe here because sim
+    values are O(1), so no catastrophic cancellation.  The voting vector
+    is only ``[S]``; it keeps the centered two-pass variance, which stays
+    exact even when ``mean >> std`` (e.g. large absolute vote counts).
+    """
     pos = (sim > 0.0) & table.valid[:, None] & table.valid[None, :]
+    x = jnp.where(pos, sim, 0.0)
     n_pos = jnp.maximum(jnp.sum(pos), 1)
-    s_mean = jnp.sum(jnp.where(pos, sim, 0.0)) / n_pos
-    s_var = jnp.sum(jnp.where(pos, (sim - s_mean) ** 2, 0.0)) / n_pos
+    s_mean = jnp.sum(x) / n_pos
+    s_var = jnp.maximum(jnp.sum(x * x) / n_pos - s_mean * s_mean, 0.0)
     alpha = jnp.where(params.alpha_abs >= 0.0, params.alpha_abs,
                       s_mean + params.alpha_sigma * jnp.sqrt(s_var))
 
@@ -39,16 +66,27 @@ def resolve_thresholds(params: DSCParams, sim: jnp.ndarray,
     return alpha, k
 
 
-def cluster(sim: jnp.ndarray, table: SubtrajTable,
-            params: DSCParams) -> ClusteringResult:
+def visit_order(table: SubtrajTable):
+    """(order, rank): Algorithm 4's visit sequence — valid slots by voting
+    descending, ties by slot index (stable argsort), invalid parked last.
+    ``order[p]`` is the slot visited at position ``p``; ``rank`` is the
+    inverse permutation (slot -> visit position)."""
+    S = table.num_slots
+    key = jnp.where(table.valid, table.voting, -jnp.inf)
+    order = jnp.argsort(-key).astype(jnp.int32)
+    rank = jnp.zeros((S,), jnp.int32).at[order].set(
+        jnp.arange(S, dtype=jnp.int32))
+    return order, rank
+
+
+def cluster_sequential(sim: jnp.ndarray, table: SubtrajTable,
+                       params: DSCParams) -> ClusteringResult:
     """Algorithm 4 over a dense similarity matrix.  O(S) sequential steps,
-    each a vectorized [S] claim/reassign update."""
+    each a vectorized [S] claim/reassign update.  The parity oracle for
+    ``cluster_rounds``."""
     S = table.num_slots
     alpha, k = resolve_thresholds(params, sim, table)
-
-    # visit order: valid slots by voting desc (invalid parked at the end).
-    key = jnp.where(table.valid, table.voting, -jnp.inf)
-    order = jnp.argsort(-key)
+    order, _ = visit_order(table)
 
     member_of0 = jnp.full((S,), -1, jnp.int32)
     member_sim0 = jnp.zeros((S,), jnp.float32)
@@ -90,7 +128,144 @@ def cluster(sim: jnp.ndarray, table: SubtrajTable,
         alpha_used=alpha, k_used=k)
 
 
-cluster_jit = jax.jit(cluster)
+# ---------------------------------------------------------------------------
+# Round-parallel engine
+# ---------------------------------------------------------------------------
+#
+# Two observations collapse Algorithm 4's serial claim loop:
+#
+# 1. Whether slot ``s`` becomes a representative depends ONLY on whether an
+#    earlier-visited representative has an alpha-edge to it
+#    (``Sim[u, s] > 0 and >= alpha``): any such claim sets
+#    ``member_of[s] >= 0`` before ``s`` is visited, and nothing ever
+#    un-claims a slot.  The running ``member_sim`` values are irrelevant to
+#    rep eligibility.  So ``is_rep`` satisfies the closed recurrence
+#        rep[s] = potential[s] and not OR_u { rep[u] : pred[u, s] }
+#    over the DAG ``pred[u, s] = potential[u] & alpha-edge(u, s)
+#    & rank[u] < rank[s]`` with ``potential = valid & voting >= k``.
+#    A round resolves every undecided slot with no undecided predecessor
+#    (its verdict can no longer change) — plus every slot already claimed
+#    by a resolved rep (its verdict is already "not rep") — so the loop
+#    runs O(rounds) ≪ S iterations instead of S.
+#
+# 2. The final membership is order-free: the sequential reassignment
+#    (lines 16-19, strict ``row > member_sim``) ends with every non-rep
+#    claimed slot assigned to the alpha-adjacent representative of maximum
+#    similarity, first-visited winning ties.  That is one claim-max
+#    reduction over representative rows with (voting desc, slot asc)
+#    tie-break — no loop at all, and exactly what the Pallas
+#    ``cluster_assign`` kernel tiles.
+
+
+def cluster_rounds(sim: jnp.ndarray, table: SubtrajTable, params: DSCParams,
+                   *, max_rounds: int | None = None, use_kernel: bool = False,
+                   with_rounds: bool = False):
+    """Round-parallel Algorithm 4 — label-identical to the oracle.
+
+    ``max_rounds=None`` runs a ``jax.lax.while_loop`` until every slot is
+    resolved (at least one slot resolves per round, so at most S rounds
+    execute).  An integer ``max_rounds`` switches to a fixed-trip
+    ``fori_loop`` (converged rounds are no-ops) for contexts where a
+    data-dependent trip count is unwelcome; because S rounds are always
+    sufficient and fewer cannot guarantee convergence, ``max_rounds < S``
+    is rejected rather than silently returning partial labels.
+    ``use_kernel=True`` runs the per-round scan and the final claim-max
+    through the fused Pallas tile kernels (``repro.kernels.cluster``).
+    ``with_rounds=True`` additionally returns the number of rounds
+    executed (i32 scalar).
+    """
+    S = table.num_slots
+    if max_rounds is not None and max_rounds < S:
+        raise ValueError(
+            f"max_rounds={max_rounds} < S={S}: the fixed-trip fallback "
+            "cannot guarantee convergence below S rounds (labels would "
+            "silently be partial); pass max_rounds >= S or use the "
+            "while_loop default")
+    alpha, k = resolve_thresholds(params, sim, table)
+    order, rank = visit_order(table)
+    potential = table.valid & (table.voting >= k)
+
+    if use_kernel:
+        from repro.kernels import default_interpret
+        from repro.kernels.cluster.ops import cluster_assign, cluster_round_scan
+        interp = default_interpret()
+
+        def scan(unresolved, is_rep):
+            return cluster_round_scan(sim, rank, unresolved, is_rep, alpha,
+                                      interpret=interp)
+
+        def assign(is_rep):
+            return cluster_assign(sim, rank, is_rep, table.valid, alpha,
+                                  interpret=interp)
+    else:
+        # the alpha-edge predicate never changes across rounds: build it
+        # once and reduce each round to two 0/1 vector-matrix products
+        # (exact: row sums are < 2^24, so f32 accumulation is integral) —
+        # the Pallas engine instead recomputes the predicate per tile in
+        # VMEM, where the rebuild is free and the [S, S] bool matrix
+        # would be extra HBM traffic.
+        predf = ((sim > 0.0) & (sim >= alpha)
+                 & (rank[:, None] < rank[None, :])).astype(jnp.float32)
+
+        def scan(unresolved, is_rep):
+            blocked = (unresolved.astype(jnp.float32) @ predf) > 0.0
+            claimed = (is_rep.astype(jnp.float32) @ predf) > 0.0
+            return blocked, claimed
+
+        def assign(is_rep):
+            return claim_max_ref(sim, order, rank, is_rep, table.valid,
+                                 alpha)
+
+    def body(state):
+        resolved, is_rep, rounds = state
+        unresolved = ~resolved
+        blocked, claimed = scan(unresolved, is_rep)
+        frontier = unresolved & (~blocked | claimed)
+        is_rep = is_rep | (frontier & ~claimed)
+        resolved = resolved | frontier
+        return resolved, is_rep, rounds + jnp.any(unresolved).astype(jnp.int32)
+
+    init = (~potential, jnp.zeros_like(potential),
+            jnp.zeros((), jnp.int32))
+    if max_rounds is None:
+        resolved, is_rep, rounds = jax.lax.while_loop(
+            lambda st: ~jnp.all(st[0]), body, init)
+    else:
+        resolved, is_rep, rounds = jax.lax.fori_loop(
+            0, max_rounds, lambda i, st: body(st), init)
+
+    member_sim, member_of = assign(is_rep)
+
+    slots = jnp.arange(S, dtype=jnp.int32)
+    member_of = jnp.where(is_rep, slots, member_of)
+    member_sim = jnp.where(is_rep, jnp.float32(jnp.inf), member_sim)
+    is_outlier = table.valid & (member_of < 0)
+    result = ClusteringResult(
+        member_of=member_of, member_sim=member_sim,
+        is_rep=is_rep, is_outlier=is_outlier,
+        alpha_used=alpha, k_used=k)
+    return (result, rounds) if with_rounds else result
+
+
+def cluster(sim: jnp.ndarray, table: SubtrajTable, params: DSCParams,
+            engine: str = "rounds", *, max_rounds: int | None = None,
+            use_kernel: bool = False) -> ClusteringResult:
+    """Problem 3 entry point: dispatch on the clustering engine.
+
+    ``engine="rounds"`` (default) is the round-parallel formulation;
+    ``engine="sequential"`` the O(S) oracle.  Both produce bit-identical
+    ``member_of`` / ``member_sim`` / ``is_rep`` / ``is_outlier``.
+    """
+    if engine == "sequential":
+        return cluster_sequential(sim, table, params)
+    if engine == "rounds":
+        return cluster_rounds(sim, table, params, max_rounds=max_rounds,
+                              use_kernel=use_kernel)
+    raise ValueError(f"unknown cluster engine {engine!r}")
+
+
+cluster_jit = jax.jit(
+    cluster, static_argnames=("engine", "max_rounds", "use_kernel"))
 
 
 def sscr(result: ClusteringResult, sim: jnp.ndarray) -> jnp.ndarray:

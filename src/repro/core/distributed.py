@@ -39,11 +39,11 @@ from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import segmentation as seg_mod
-from repro.core.clustering import cluster, resolve_thresholds
+from repro.core.clustering import cluster
 from repro.core.geometry import filter_delta_t
 from repro.core.partitioning import PartitionedBatch
 from repro.core.refine import refine_states
-from repro.core.similarity import build_subtraj_table_arrays
+from repro.core.similarity import build_subtraj_table_arrays, finalize_sim
 from repro.core.types import ClusteringResult, DSCParams, JoinResult, SubtrajTable
 from repro.utils.compat import shard_map as shard_map_compat
 from repro.utils.tree import pytree_dataclass
@@ -127,6 +127,8 @@ def build_dsc_program(
     mode: str = "materialize",      # "materialize" | "fused"
     sim_strategy: str = "psum",     # "psum" | "allgather" (column-sharded)
     sim_dtype: str = "f32",         # "f32" | "bf16" collective payload
+    cluster_engine: str = "rounds",  # "rounds" | "sequential" (oracle)
+    cluster_use_kernel: bool = False,  # Pallas tile kernels for phase 5
 ):
     """Build the shard_map program (not yet jitted) for ``parts`` shapes.
 
@@ -155,9 +157,19 @@ def build_dsc_program(
     shapes — but out-of-reach points never enter the join or any
     downstream reduction), and the jnp join path additionally skips
     (ref row, cand row) pairs whose bboxes are provably farther than eps
-    apart.  Both filters are conservative, so results are unchanged."""
+    apart.  Both filters are conservative, so results are unchanged.
+
+    ``cluster_engine`` selects the phase-5 engine per partition:
+    ``"rounds"`` (round-parallel, default) or ``"sequential"`` (the O(S)
+    oracle); outputs are label-identical (DESIGN.md §6).
+    ``cluster_use_kernel=True`` backs the round engine with the Pallas
+    tile kernels (``repro.kernels.cluster``) inside each partition's
+    shard — the accelerator path; the jnp formulation is faster on
+    CPU."""
     if mode not in ("materialize", "fused"):
         raise ValueError(f"unknown mode {mode!r}")
+    if cluster_engine not in ("rounds", "sequential"):
+        raise ValueError(f"unknown cluster engine {cluster_engine!r}")
     nP = mesh.shape[part_axis]
     nM = mesh.shape[model_axis]
     Pn, T, Mp = parts.x.shape
@@ -402,10 +414,10 @@ def build_dsc_program(
                 raw = raw.astype(jnp.bfloat16)
             raw = lax.psum(raw, model_axis).astype(jnp.float32)
 
-        denom = jnp.minimum(table.card[:, None], table.card[None, :])
-        sim = raw / jnp.maximum(denom, 1).astype(jnp.float32)
-        sim = jnp.maximum(sim, sim.T)
-        sim = sim * (1.0 - jnp.eye(S, dtype=sim.dtype))
+        # Eq. 2 normalization — shared with the single-host paths (the
+        # table.valid mask it adds is a no-op here: weight is only ever
+        # scattered into slots that own at least one valid point)
+        sim = finalize_sim(raw, table)
 
         # subtrajectories active in THIS partition
         active = jnp.zeros((S + 1,), bool).at[gid_own.reshape(-1)].set(
@@ -414,7 +426,8 @@ def build_dsc_program(
         sim = jnp.where(active[:, None] & active[None, :], sim, 0.0)
 
         # ---------------- phase 5: per-partition clustering -------------
-        res_l = cluster(sim, part_table, params)
+        res_l = cluster(sim, part_table, params, engine=cluster_engine,
+                        use_kernel=cluster_use_kernel)
         alpha, k = res_l.alpha_used, res_l.k_used
 
         # ---------------- phase 6: cross-partition refinement -----------

@@ -50,7 +50,8 @@ class DSCOutput:
 
 
 def _finish(batch, params, join, vote, masks, tile_ids=None,
-            fused_tiles=None) -> DSCOutput:
+            fused_tiles=None, cluster_engine="rounds",
+            cluster_use_kernel=False) -> DSCOutput:
     """Segmentation onward — shared by every join/vote front-end."""
     nvote = voting.normalized_voting(vote, batch.valid)
     if params.segmentation == "tsa1":
@@ -74,15 +75,20 @@ def _finish(batch, params, join, vote, masks, tile_ids=None,
         sim = similarity.similarity_matrix(
             join, seg, seg.sub_local, table, params.max_subtrajs_per_traj)
 
-    result = cluster(sim, table, params)
+    result = cluster(sim, table, params, engine=cluster_engine,
+                     use_kernel=cluster_use_kernel)
     return DSCOutput(join=join, vote=vote, seg=seg, table=table, sim=sim,
                      result=result, sscr=sscr(result, sim),
                      rmse=rmse(result, sim, params.eps_sp))
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel", "use_index"))
+@functools.partial(jax.jit, static_argnames=("use_kernel", "use_index",
+                                             "cluster_engine",
+                                             "cluster_use_kernel"))
 def _run_dsc_materialize(batch: TrajectoryBatch, params: DSCParams,
-                         use_kernel: bool, use_index: bool) -> DSCOutput:
+                         use_kernel: bool, use_index: bool,
+                         cluster_engine: str,
+                         cluster_use_kernel: bool) -> DSCOutput:
     if use_kernel:
         from repro.kernels.stjoin import ops as stjoin_ops
         join = stjoin_ops.subtrajectory_join(
@@ -94,18 +100,24 @@ def _run_dsc_materialize(batch: TrajectoryBatch, params: DSCParams,
     vote = voting.point_voting(join)
     masks = (voting.neighbor_mask_packed(join)
              if params.segmentation == "tsa2" else None)
-    return _finish(batch, params, join, vote, masks)
+    return _finish(batch, params, join, vote, masks,
+                   cluster_engine=cluster_engine,
+                   cluster_use_kernel=cluster_use_kernel)
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("cluster_engine",
+                                             "cluster_use_kernel"))
 def _run_dsc_from_join(batch: TrajectoryBatch, params: DSCParams,
-                       join: JoinResult) -> DSCOutput:
+                       join: JoinResult, cluster_engine: str = "rounds",
+                       cluster_use_kernel: bool = False) -> DSCOutput:
     """Materializing tail for a join produced outside the jit boundary
     (the host-planned index-pruned Pallas join)."""
     vote = voting.point_voting(join)
     masks = (voting.neighbor_mask_packed(join)
              if params.segmentation == "tsa2" else None)
-    return _finish(batch, params, join, vote, masks)
+    return _finish(batch, params, join, vote, masks,
+                   cluster_engine=cluster_engine,
+                   cluster_use_kernel=cluster_use_kernel)
 
 
 def _tile_kwargs(fused_tiles):
@@ -116,9 +128,13 @@ def _tile_kwargs(fused_tiles):
     return dict(rows=rows, bc=bc, bm=bm)
 
 
-@functools.partial(jax.jit, static_argnames=("fused_tiles",))
+@functools.partial(jax.jit, static_argnames=("fused_tiles",
+                                             "cluster_engine",
+                                             "cluster_use_kernel"))
 def _run_dsc_fused(batch: TrajectoryBatch, params: DSCParams,
-                   tile_ids=None, fused_tiles=None) -> DSCOutput:
+                   tile_ids=None, fused_tiles=None,
+                   cluster_engine: str = "rounds",
+                   cluster_use_kernel: bool = False) -> DSCOutput:
     from repro.kernels.stjoin import ops as stjoin_ops
     vote, masks = stjoin_ops.stjoin_vote_fused_arrays(
         batch.x, batch.y, batch.t, batch.valid, batch.traj_id,
@@ -127,13 +143,16 @@ def _run_dsc_fused(batch: TrajectoryBatch, params: DSCParams,
         with_masks=params.segmentation == "tsa2",
         **_tile_kwargs(fused_tiles))
     return _finish(batch, params, None, vote, masks, tile_ids=tile_ids,
-                   fused_tiles=fused_tiles)
+                   fused_tiles=fused_tiles, cluster_engine=cluster_engine,
+                   cluster_use_kernel=cluster_use_kernel)
 
 
 def run_dsc(batch: TrajectoryBatch, params: DSCParams,
             use_kernel: bool = False, *, use_index: bool = False,
             mode: str = "materialize",
-            fused_tiles: tuple[int, int, int] | None = None) -> DSCOutput:
+            fused_tiles: tuple[int, int, int] | None = None,
+            cluster_engine: str = "rounds",
+            cluster_use_kernel: bool = False) -> DSCOutput:
     """Run the full DSC pipeline on one host / one partition.
 
     ``mode="fused"`` streams the join (no ``[T, M, C]`` cube;
@@ -142,9 +161,19 @@ def run_dsc(batch: TrajectoryBatch, params: DSCParams,
     planning, so the inputs must be concrete in that case.
     ``fused_tiles=(rows, bc, bm)`` overrides the fused kernels' tile
     geometry (benchmarks use this to pin one inspected configuration).
+    ``cluster_engine`` selects the Problem 3 engine: ``"rounds"``
+    (round-parallel, default) or ``"sequential"`` (the O(S) parity
+    oracle) — label-identical outputs either way (DESIGN.md §6).
+    ``cluster_use_kernel=True`` runs the round engine's per-round scan
+    and claim-max through the fused Pallas tile kernels
+    (``repro.kernels.cluster``) — the accelerator path; the default jnp
+    formulation is faster on CPU, where the kernels run in interpret
+    mode.
     """
     if mode not in ("materialize", "fused"):
         raise ValueError(f"unknown mode {mode!r}")
+    if cluster_engine not in ("rounds", "sequential"):
+        raise ValueError(f"unknown cluster engine {cluster_engine!r}")
     if mode == "fused":
         tile_ids = None
         if use_index:
@@ -157,30 +186,41 @@ def run_dsc(batch: TrajectoryBatch, params: DSCParams,
             # exact tiling the ids were built for
             tile_ids = plan.tile_ids
             fused_tiles = (plan.rows, plan.bc, plan.bm)
-        return _run_dsc_fused(batch, params, tile_ids, fused_tiles)
+        return _run_dsc_fused(batch, params, tile_ids, fused_tiles,
+                              cluster_engine=cluster_engine,
+                              cluster_use_kernel=cluster_use_kernel)
     if use_index and use_kernel:
         # grid-pruned Pallas join: host-side planning pass, then jitted tail
         from repro.kernels.stjoin import ops as stjoin_ops
         join = stjoin_ops.subtrajectory_join(
             batch, batch, params.eps_sp, params.eps_t, params.delta_t,
             use_index=True)
-        return _run_dsc_from_join(batch, params, join)
-    return _run_dsc_materialize(batch, params, use_kernel, use_index)
+        return _run_dsc_from_join(batch, params, join,
+                                  cluster_engine=cluster_engine,
+                                  cluster_use_kernel=cluster_use_kernel)
+    return _run_dsc_materialize(batch, params, use_kernel, use_index,
+                                cluster_engine, cluster_use_kernel)
 
 
 def cluster_summary(out: DSCOutput) -> dict:
-    """Host-side summary: cluster -> member subtraj slots; outliers list."""
+    """Host-side summary: cluster -> member subtraj slots; outliers list.
+
+    Vectorized numpy grouping (sort-by-owner + unique split) instead of a
+    Python loop over every slot — this runs once per evaluation-script
+    call, on tables whose slot count grows with T * max_subs.
+    """
     import numpy as np
     member_of = np.asarray(out.result.member_of)
     is_rep = np.asarray(out.result.is_rep)
     is_out = np.asarray(out.result.is_outlier)
     valid = np.asarray(out.table.valid)
-    clusters: dict[int, list[int]] = {}
-    for s in np.nonzero(valid)[0]:
-        if is_rep[s]:
-            clusters.setdefault(int(s), []).append(int(s))
-        elif member_of[s] >= 0:
-            clusters.setdefault(int(member_of[s]), []).append(int(s))
+    owner = np.where(is_rep, np.arange(member_of.shape[0]), member_of)
+    slots = np.nonzero(valid & (is_rep | (member_of >= 0)))[0]
+    by_owner = slots[np.argsort(owner[slots], kind="stable")]
+    reps, starts = np.unique(owner[by_owner], return_index=True)
+    clusters: dict[int, list[int]] = {
+        int(rep): members.tolist()
+        for rep, members in zip(reps, np.split(by_owner, starts[1:]))}
     return {
         "clusters": clusters,
         "outliers": [int(s) for s in np.nonzero(valid & is_out)[0]],

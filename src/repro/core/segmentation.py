@@ -55,24 +55,50 @@ def _window_means(sig: jnp.ndarray, valid: jnp.ndarray, w: int):
     return m1, m2
 
 
+def _neighbor_max_left(d: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Per position ``n``: max of ``d[n-k .. n-1]`` (−inf outside), via the
+    two-pass block cummax trick — an O(M) sliding-window max with no
+    ``[T, M, k]`` intermediate.  Any window of size ``k`` spans at most two
+    ``k``-aligned blocks, so it is the max of one block-suffix cummax and
+    one block-prefix cummax."""
+    T, M = d.shape
+    nb = -(-M // k)
+    y = jnp.pad(d, ((0, 0), (0, nb * k - M)), constant_values=-jnp.inf)
+    blk = y.reshape(T, nb, k)
+    pre = jax.lax.cummax(blk, axis=2).reshape(T, nb * k)
+    suf = jax.lax.cummax(blk, axis=2, reverse=True).reshape(T, nb * k)
+    n = jnp.arange(M)
+    start = jnp.clip(n - k + 1, 0, None)
+    incl = jnp.where(n >= k - 1,                       # max of d[n-k+1 .. n]
+                     jnp.maximum(suf[:, start], pre[:, :M]), pre[:, :M])
+    return jnp.concatenate(
+        [jnp.full((T, 1), -jnp.inf, d.dtype), incl[:, :-1]], axis=1)
+
+
 def _local_max_cuts(d: jnp.ndarray, valid: jnp.ndarray, w: int, tau,
                     count: jnp.ndarray) -> jnp.ndarray:
-    """Cut where d[n] > tau and d[n] is the max of its +-(w-1) window."""
+    """Cut where d[n] > tau and d[n] is the max of its +-(w-1) window.
+
+    The windowed maximum over [n-w+1, n+w-1] splits into the left-neighbor
+    max (strict-left tie break: ``d[n]`` must beat it strictly) and the
+    right-neighbor max (``>=`` suffices); both come from the O(M)
+    prefix/suffix cummax pass instead of stacking 2w-1 shifted copies
+    (equality with the stacked formulation is pinned by
+    ``tests/test_segmentation.py``)."""
     T, M = d.shape
     n = jnp.arange(M)
     # admissible positions: w+1 .. N-w-1 (1-based paper indexing -> w .. N-w-1)
     admissible = (n[None, :] >= w) & (n[None, :] <= count[:, None] - w - 1)
     d = jnp.where(valid & admissible, d, -jnp.inf)
 
-    neg_inf = -jnp.inf
     pads = w - 1
-    dp = jnp.pad(d, ((0, 0), (pads, pads)), constant_values=neg_inf)
-    windows = jnp.stack(
-        [dp[:, k:k + M] for k in range(2 * pads + 1)], axis=-1)  # [T, M, 2w-1]
-    wmax = jnp.max(windows, axis=-1)
-    # strict-left tie break: position n wins ties against positions > n only.
-    left = jnp.max(windows[..., :pads], axis=-1) if pads > 0 else jnp.full_like(d, neg_inf)
-    is_max = (d >= wmax) & (d > left)
+    if pads > 0:
+        left = _neighbor_max_left(d, pads)
+        right = jnp.flip(_neighbor_max_left(jnp.flip(d, axis=1), pads),
+                         axis=1)
+    else:
+        left = right = jnp.full_like(d, -jnp.inf)
+    is_max = (d > left) & (d >= right)
     return is_max & (d > tau) & admissible & valid
 
 

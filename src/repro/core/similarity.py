@@ -64,8 +64,10 @@ def finalize_sim(raw: jnp.ndarray, table: SubtrajTable) -> jnp.ndarray:
     denom = jnp.minimum(table.card[:, None], table.card[None, :])
     sim = raw / jnp.maximum(denom, 1).astype(jnp.float32)
     sim = jnp.maximum(sim, sim.T)
-    sim = jnp.where(table.valid[:, None] & table.valid[None, :], sim, 0.0)
-    return sim * (1.0 - jnp.eye(S, dtype=sim.dtype))
+    idx = jnp.arange(S)
+    keep = (table.valid[:, None] & table.valid[None, :]
+            & (idx[:, None] != idx[None, :]))   # index mask, no [S, S] eye
+    return jnp.where(keep, sim, 0.0)            # one fused mask pass
 
 
 def similarity_matrix(

@@ -7,6 +7,8 @@ Each kernel package ships three modules:
 
 Kernels:
   stjoin    — best-match spatiotemporal join (the paper's dominant cost)
+  cluster   — round-parallel greedy clustering (Algorithm 4) round scan +
+              claim-max over [S, S] tiles
   lcss      — weighted-LCSS dynamic program (Eq. 2), anti-diagonal wavefront
   jaccard   — TSA2 sliding-window set-union Jaccard over bit-packed masks
   attention — flash attention for the LM serving path (optional)

@@ -1,0 +1,8 @@
+"""Round-parallel greedy clustering kernels (Algorithm 4, Problem 3).
+
+``cluster.py`` — fused Pallas tile kernels over the dense ``[S, S]``
+similarity matrix: the per-round eligibility scan (blocked/claimed) and the
+final claim-max membership reduction.
+``ops.py``     — jit'd wrappers with the tile-geometry planning / padding.
+``ref.py``     — the pure-jnp oracle used by the core engine and the tests.
+"""

@@ -1,0 +1,139 @@
+"""Pallas tile kernels for the round-parallel greedy clustering engine.
+
+Contract (see ``repro.core.clustering.cluster_rounds`` and ``ref.py``)
+---------------------------------------------------------------------
+The round engine iterates two ``[S, S]`` reductions over the dense
+similarity matrix:
+
+* ``_round_scan_kernel``  per round: for every column (slot) ``s``, OR-
+  reduce over rows ``u`` the alpha-edge predicate
+  ``sim[u, s] > 0 and sim[u, s] >= alpha and rank[u] < rank[s]`` masked by
+  the round state — ``unresolved[u]`` yields ``blocked[s]`` (s must wait),
+  ``is_rep[u]`` yields ``claimed[s]`` (s resolves as non-rep now).  One
+  sweep fuses the eligibility scan, the threshold test and both masks.
+* ``_assign_kernel``      once, after the representative set converges:
+  per column, the running (max weight, min visit rank, slot) accumulator
+  over representative rows — the claim-max that replaces Algorithm 4's
+  sequential reassignment updates.
+
+Tiling
+------
+grid = (S/bs, S/bu); column block ``j`` (axis 0) owns the output block and
+is revisited across the row-block axis ``i`` (axis 1, fastest) with the
+accumulator resident in VMEM — the same "contraction last axis" layout as
+``kernels/stjoin/stjoin.py``.  Per-tile working set at the (8, 128)
+default is a single f32 VPU register tile plus [bs] accumulators, so VMEM
+holds the entire round state; the only HBM traffic per round is one read
+of the ``[S, S]`` matrix and O(S) state vectors — compare the sequential
+oracle, which makes S dependent row reads that no pipeline can overlap.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BIG_RANK = 2**31 - 1          # python int: kernels may not capture arrays
+
+
+def _round_scan_kernel(sim, rank_r, rank_c, unresolved, is_rep, thr,
+                       out_blocked, out_claimed):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        out_blocked[...] = jnp.zeros_like(out_blocked)
+        out_claimed[...] = jnp.zeros_like(out_claimed)
+
+    alpha = thr[0]
+    s = sim[...]                                   # [bu, bs]
+    pred = ((s > 0.0) & (s >= alpha)
+            & (rank_r[...][:, None] < rank_c[...][None, :]))
+    out_blocked[...] |= jnp.any(pred & unresolved[...][:, None], axis=0)
+    out_claimed[...] |= jnp.any(pred & is_rep[...][:, None], axis=0)
+
+
+def _assign_kernel(sim, rank_r, is_rep, valid_c, thr,
+                   out_w, out_rank, out_slot, *, bu: int):
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        out_w[...] = jnp.zeros_like(out_w)
+        out_rank[...] = jnp.full_like(out_rank, _BIG_RANK)
+        out_slot[...] = jnp.full_like(out_slot, -1)
+
+    alpha = thr[0]
+    s = sim[...]                                   # [bu, bs]
+    claim = (is_rep[...][:, None] & valid_c[...][None, :]
+             & (s > 0.0) & (s >= alpha))
+    w = jnp.where(claim, s, 0.0)
+    loc_w = jnp.max(w, axis=0)                     # [bs]
+    cand = claim & (w == loc_w[None, :]) & (loc_w[None, :] > 0.0)
+    r = jnp.where(cand, rank_r[...][:, None], _BIG_RANK)
+    loc_rank = jnp.min(r, axis=0)
+    loc_slot = i * bu + jnp.argmin(r, axis=0).astype(jnp.int32)
+
+    acc_w = out_w[...]
+    acc_rank = out_rank[...]
+    # lexicographic (weight desc, visit rank asc) — ties across row blocks
+    # resolve exactly like the full-matrix argmin in ref.claim_max_ref
+    better = (loc_w > acc_w) | ((loc_w == acc_w) & (loc_rank < acc_rank))
+    out_w[...] = jnp.where(better, loc_w, acc_w)
+    out_rank[...] = jnp.where(better, loc_rank, acc_rank)
+    out_slot[...] = jnp.where(better, loc_slot, out_slot[...])
+
+
+def _specs(bu: int, bs: int):
+    sim_spec = pl.BlockSpec((bu, bs), lambda j, i: (i, j))
+    row_spec = pl.BlockSpec((bu,), lambda j, i: (i,))
+    col_spec = pl.BlockSpec((bs,), lambda j, i: (j,))
+    thr_spec = pl.BlockSpec((1,), lambda j, i: (0,))
+    out_spec = pl.BlockSpec((bs,), lambda j, i: (j,))
+    return sim_spec, row_spec, col_spec, thr_spec, out_spec
+
+
+@functools.partial(jax.jit, static_argnames=("bu", "bs", "interpret"))
+def round_scan_pallas(sim, rank, unresolved, is_rep, alpha, *,
+                      bu: int = 8, bs: int = 128, interpret: bool = True):
+    """(blocked [S], claimed [S]) for one round; S divisible by bu and bs."""
+    S = sim.shape[0]
+    assert sim.shape == (S, S) and S % bu == 0 and S % bs == 0, \
+        (sim.shape, bu, bs)
+    thr = jnp.asarray(alpha, jnp.float32).reshape(1)
+    sim_spec, row_spec, col_spec, thr_spec, out_spec = _specs(bu, bs)
+    return pl.pallas_call(
+        _round_scan_kernel,
+        grid=(S // bs, S // bu),
+        in_specs=[sim_spec, row_spec, col_spec, row_spec, row_spec,
+                  thr_spec],
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((S,), jnp.bool_)] * 2,
+        interpret=interpret,
+    )(sim, rank.astype(jnp.int32), rank.astype(jnp.int32),
+      unresolved.astype(jnp.bool_), is_rep.astype(jnp.bool_), thr)
+
+
+@functools.partial(jax.jit, static_argnames=("bu", "bs", "interpret"))
+def assign_pallas(sim, rank, is_rep, valid, alpha, *,
+                  bu: int = 8, bs: int = 128, interpret: bool = True):
+    """(best_w [S], best_slot [S]) claim-max over representative rows."""
+    S = sim.shape[0]
+    assert sim.shape == (S, S) and S % bu == 0 and S % bs == 0, \
+        (sim.shape, bu, bs)
+    thr = jnp.asarray(alpha, jnp.float32).reshape(1)
+    sim_spec, row_spec, col_spec, thr_spec, out_spec = _specs(bu, bs)
+    w, _, slot = pl.pallas_call(
+        functools.partial(_assign_kernel, bu=bu),
+        grid=(S // bs, S // bu),
+        in_specs=[sim_spec, row_spec, row_spec, col_spec, thr_spec],
+        out_specs=[out_spec, out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((S,), jnp.float32),
+                   jax.ShapeDtypeStruct((S,), jnp.int32),
+                   jax.ShapeDtypeStruct((S,), jnp.int32)],
+        interpret=interpret,
+    )(sim, rank.astype(jnp.int32), is_rep.astype(jnp.bool_),
+      valid.astype(jnp.bool_), thr)
+    return w, jnp.where(w > 0.0, slot, -1)

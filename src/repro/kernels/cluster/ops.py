@@ -1,0 +1,69 @@
+"""Public wrappers for the round-parallel clustering kernels.
+
+``plan_tiles`` resolves the tile geometry; the wrappers own the padding —
+callers pass natural ``[S]`` / ``[S, S]`` operands and get ``[S]`` results
+back, so the padding invariants (padded slots carry False state, zero
+similarity, and fresh distinct ranks, and therefore join no reduction)
+live in exactly one place.  On CPU the kernels run in interpret mode
+(``repro.kernels.default_interpret``); the jnp oracle in ``ref.py`` is
+the semantics they are tested against.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.kernels.cluster.cluster import assign_pallas, round_scan_pallas
+
+
+def plan_tiles(S: int, target_bu: int = 8, target_bs: int = 128):
+    """(bu, bs, S_padded): row/column tile sizes and the padded slot count.
+
+    Mirrors the stjoin convention (f32 (8, 128) register tiles); ``S`` is
+    padded up to a common multiple so both tilings divide it.
+    """
+    bu, bs = target_bu, target_bs
+    q = math.lcm(bu, bs)
+    return bu, bs, -(-S // q) * q
+
+
+def _padded(sim, rank, vecs, bu: int, bs: int):
+    """Pad the matrix, ranks, and bool state vectors to the tile multiple.
+
+    Padded slots get zero similarity rows/columns, all-False state, and
+    distinct out-of-range ranks — they contribute to no reduction and are
+    sliced off by the callers.
+    """
+    S = sim.shape[0]
+    _, _, Sp = plan_tiles(S, bu, bs)
+    if Sp == S:
+        return sim, rank, vecs
+    sim_p = jnp.pad(sim, ((0, Sp - S), (0, Sp - S)))
+    rank_p = jnp.concatenate(
+        [rank.astype(jnp.int32), jnp.arange(S, Sp, dtype=jnp.int32)])
+    vecs_p = [jnp.pad(v, (0, Sp - S), constant_values=False) for v in vecs]
+    return sim_p, rank_p, vecs_p
+
+
+def cluster_round_scan(sim, rank, unresolved, is_rep, alpha, *,
+                       bu: int = 8, bs: int = 128, interpret: bool = True):
+    """(blocked [S], claimed [S]) — one fused round scan."""
+    S = sim.shape[0]
+    sim_p, rank_p, (unres_p, rep_p) = _padded(
+        sim, rank, [unresolved, is_rep], bu, bs)
+    blocked, claimed = round_scan_pallas(
+        sim_p, rank_p, unres_p, rep_p, alpha, bu=bu, bs=bs,
+        interpret=interpret)
+    return blocked[:S], claimed[:S]
+
+
+def cluster_assign(sim, rank, is_rep, valid, alpha, *,
+                   bu: int = 8, bs: int = 128, interpret: bool = True):
+    """(best_w [S], best_slot [S]) — final claim-max over rep rows."""
+    S = sim.shape[0]
+    sim_p, rank_p, (rep_p, valid_p) = _padded(
+        sim, rank, [is_rep, valid], bu, bs)
+    w, slot = assign_pallas(sim_p, rank_p, rep_p, valid_p, alpha,
+                            bu=bu, bs=bs, interpret=interpret)
+    return w[:S], slot[:S]

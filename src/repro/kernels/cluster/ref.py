@@ -1,0 +1,55 @@
+"""jnp oracle for the round-parallel clustering primitives.
+
+These two reductions are the entire per-iteration work of the
+round-parallel engine (``repro.core.clustering.cluster_rounds``); the
+Pallas kernels in ``cluster.py`` tile exactly this math over ``[S, S]``
+blocks and must match it bit for bit (``tests/test_cluster_rounds.py``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def round_scan_ref(sim, rank, unresolved, is_rep, alpha):
+    """One round's fused eligibility scan over the full matrix.
+
+    ``blocked[s]``: an unresolved earlier-visited slot still has an
+    alpha-edge to ``s`` (``sim[u, s] > 0`` and ``>= alpha`` with
+    ``rank[u] < rank[s]``) — s's verdict could still change, it must wait.
+    ``claimed[s]``: a resolved representative claims ``s`` — s resolves as
+    a non-representative immediately, whatever its other predecessors do.
+
+    Row masks (``unresolved``, ``is_rep``) are subsets of the
+    potential-representative set (valid & voting >= k), so no separate
+    validity test is needed; ``rank[u] < rank[s]`` excludes the diagonal
+    because ``rank`` is a strict permutation.
+    """
+    pred = (sim > 0.0) & (sim >= alpha) & (rank[:, None] < rank[None, :])
+    blocked = jnp.any(pred & unresolved[:, None], axis=0)
+    claimed = jnp.any(pred & is_rep[:, None], axis=0)
+    return blocked, claimed
+
+
+def claim_max_ref(sim, order, rank, is_rep, valid, alpha):
+    """Final membership claim-max: per column ``s``, the representative row
+    of maximum similarity, earliest visit position (minimum rank) winning
+    ties — the fixed point of Algorithm 4's strict ``row > member_sim``
+    reassignment.
+
+    The tie-break is a second min-reduction over the rank column vector
+    (masked to the argmax set) followed by one [S] gather through
+    ``order`` — row gathers / argmin over the [S, S] matrix are
+    deliberately avoided (pathological on CPU backends).  Returns
+    ``(best_w [S] f32, best_slot [S] i32)``; ``(0.0, -1)`` where no
+    representative claims the column.
+    """
+    S = sim.shape[0]
+    claim = (is_rep[:, None] & valid[None, :]
+             & (sim > 0.0) & (sim >= alpha))
+    w = jnp.where(claim, sim, 0.0)
+    best_w = jnp.max(w, axis=0)
+    cand = claim & (w == best_w[None, :])
+    r = jnp.where(cand, rank[:, None], S)
+    best_rank = jnp.min(r, axis=0)                 # min rank among maxima
+    best_slot = order[jnp.clip(best_rank, 0, S - 1)]
+    return best_w, jnp.where(best_w > 0.0, best_slot, -1)

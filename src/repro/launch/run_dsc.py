@@ -47,6 +47,15 @@ def main(argv=None):
                     help="join execution mode: materialize the JoinResult "
                          "cube (parity oracle) or stream it through the "
                          "fused Pallas epilogues (no [T, M, C] buffer)")
+    ap.add_argument("--cluster-engine", default="rounds",
+                    choices=["rounds", "sequential"],
+                    help="Problem 3 engine: round-parallel greedy "
+                         "(O(rounds) iterations) or the O(S) sequential "
+                         "oracle — label-identical outputs")
+    ap.add_argument("--cluster-use-kernel", action="store_true",
+                    help="back the round engine with the Pallas tile "
+                         "kernels (accelerator path; interpret mode on "
+                         "CPU)")
     ap.add_argument("--segmentation", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -79,7 +88,9 @@ def main(argv=None):
         out = run_dsc_distributed(parts, params, mesh,
                                   use_kernel=args.use_kernel,
                                   use_index=args.use_index,
-                                  mode=args.mode)
+                                  mode=args.mode,
+                                  cluster_engine=args.cluster_engine,
+                                  cluster_use_kernel=args.cluster_use_kernel)
         res, table = out.result, out.table
         n_rep = int(np.asarray(res.is_rep).sum())
         n_out = int(np.asarray(res.is_outlier).sum())
@@ -90,7 +101,9 @@ def main(argv=None):
                  P, args.model_par, n_rep, n_mem, n_out, time.time() - t0)
     else:
         out = run_dsc(batch, params, use_kernel=args.use_kernel,
-                      use_index=args.use_index, mode=args.mode)
+                      use_index=args.use_index, mode=args.mode,
+                      cluster_engine=args.cluster_engine,
+                      cluster_use_kernel=args.cluster_use_kernel)
         s = cluster_summary(out)
         log.info("DSC: %d clusters, %d outliers, RMSE %.4f, SSCR %.2f "
                  "in %.2fs", s["num_clusters"], len(s["outliers"]),

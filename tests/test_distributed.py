@@ -87,6 +87,15 @@ _DRIVER = textwrap.dedent("""
     report["p4_fused_vote_close"] = bool(np.allclose(
         np.asarray(out_f.vote), np.asarray(out.vote), atol=1e-4))
 
+    # sequential clustering oracle: the round-parallel per-partition
+    # engine (the default above) must be label-identical
+    out_s = run_dsc_distributed(parts, params, mesh,
+                                cluster_engine="sequential")
+    report["p4_cluster_engine_agree"] = bool(
+        (np.asarray(out_s.result.member_of) == member_of).all()
+        and (np.asarray(out_s.result.is_rep) == is_rep).all()
+        and (np.asarray(out_s.result.is_outlier) == is_out).all())
+
     print("JSON" + json.dumps(report))
 """)
 
@@ -138,6 +147,14 @@ def test_p4_fused_streaming_agrees(dist_report):
     """mode="fused" (no per-rank join cube) matches the materializing run."""
     assert dist_report["p4_fused_agree"] == 1.0
     assert dist_report["p4_fused_vote_close"]
+
+
+@pytest.mark.distributed
+@pytest.mark.slow
+def test_p4_cluster_engines_identical(dist_report):
+    """Round-parallel vs sequential clustering engine, per partition +
+    Algorithm 5 refinement: bit-identical global labels."""
+    assert dist_report["p4_cluster_engine_agree"]
 
 
 def test_partitioning_is_equi_depth():

@@ -4,8 +4,8 @@ import pytest
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
-from repro.core.segmentation import (_window_overlap_counts, _windowed_union,
-                                     tsa1, tsa2)
+from repro.core.segmentation import (_local_max_cuts, _window_overlap_counts,
+                                     _windowed_union, tsa1, tsa2)
 from repro.core.voting import neighbor_mask_packed
 from repro.core.types import JoinResult
 
@@ -109,6 +109,46 @@ def test_tsa2_bitplane_chunking_matches_full_expansion(seed):
     want_union = np.asarray(jnp.sum(l1 | l2, axis=-1))
     assert (np.asarray(inter) == want_inter).all()
     assert (np.asarray(union) == want_union).all()
+
+
+def _local_max_cuts_stacked(d, valid, w, tau, count):
+    """The former implementation of ``_local_max_cuts``: materializes all
+    2w-1 shifted copies as a ``[T, M, 2w-1]`` stack.  Kept here as the
+    regression oracle for the O(M) prefix/suffix cummax rewrite."""
+    T, M = d.shape
+    n = jnp.arange(M)
+    admissible = (n[None, :] >= w) & (n[None, :] <= count[:, None] - w - 1)
+    d = jnp.where(valid & admissible, d, -jnp.inf)
+
+    neg_inf = -jnp.inf
+    pads = w - 1
+    dp = jnp.pad(d, ((0, 0), (pads, pads)), constant_values=neg_inf)
+    windows = jnp.stack(
+        [dp[:, k:k + M] for k in range(2 * pads + 1)], axis=-1)
+    wmax = jnp.max(windows, axis=-1)
+    left = (jnp.max(windows[..., :pads], axis=-1) if pads > 0
+            else jnp.full_like(d, neg_inf))
+    is_max = (d >= wmax) & (d > left)
+    return is_max & (d > tau) & admissible & valid
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_local_max_cuts_cummax_matches_stacked(seed):
+    """The prefix/suffix cummax sliding max must reproduce the stacked
+    2w-1-copies formulation bit for bit — including duplicate d values
+    (strict-left tie break) and masked/-inf positions."""
+    rng = np.random.default_rng(seed)
+    T, M = 3, 57                                  # non-multiple of any block
+    # quantized signal -> frequent exact ties inside windows
+    d = jnp.asarray(rng.integers(0, 6, (T, M)).astype(np.float32) / 5.0)
+    count = rng.integers(5, M + 1, T)
+    valid = jnp.asarray(np.arange(M)[None, :] < count[:, None])
+    count = jnp.asarray(count.astype(np.int32))
+    for w in (1, 2, 5, 11):
+        got = _local_max_cuts(d, valid, w, 0.25, count)
+        want = _local_max_cuts_stacked(d, valid, w, 0.25, count)
+        assert np.array_equal(np.asarray(got), np.asarray(want)), (seed, w)
 
 
 def test_max_subs_clipping():
