@@ -147,6 +147,120 @@ def _cluster_gate_instance(S: int = 256, seed: int = 0):
     return jnp.asarray(np.maximum(sim, sim.T).astype(np.float32)), table
 
 
+def _seg_gate_instance(T: int = 32, M: int = 64, W: int = 8, seed: int = 0):
+    """Deterministic fixed-shape TSA2 instance for the CI gate: W=8 packed
+    words (C=256 candidates) so the structural memory comparison is made
+    at the same shape in smoke and full runs."""
+    rng = np.random.default_rng(seed)
+    masks = jnp.asarray(rng.integers(0, 2 ** 31, (T, M, W)).astype(np.uint32))
+    valid = jnp.ones((T, M), bool)
+    return masks, valid
+
+
+def bench_segmentation(w: int = 4, tau: float = 0.2, maxS: int = 8,
+                       iters: int = 3) -> dict:
+    """Bit-plane vs packed-word TSA2 segmentation: wall-clock, cut-mask
+    identity, and the structural memory proof.
+
+    Three signal paths at the fixed W=8 gate shape: the packed windowed-OR
+    engine (production), the bit-plane *chunked* fold (the pre-packed
+    production path, [T, M, 32] int32 per word-step), and the full
+    bit-plane expansion ([T, M, W*32] int32 — the pinned regression
+    oracle, what TSA2 costs without packing).  The deterministic gates are
+    d/cut identity, the absence of any [T, M, 32]-element int32 buffer in
+    the packed HLO, and a >=8x peak-buffer reduction vs the bit-plane
+    oracle; wall-clock is recorded as trajectory data only (CPU
+    interpret-path timing, same stance as the fused-join and clustering
+    gates).
+    """
+    from repro.core.segmentation import (_windowed_union, tsa2, tsa2_signal)
+
+    masks, valid = _seg_gate_instance()
+    T, M, W = masks.shape
+
+    def oracle_signal(m):
+        """Full bit-plane expansion, end to end in one graph."""
+        n = jnp.arange(m.shape[1])
+        l1 = _windowed_union(m, n - w, n - 1)
+        l2 = _windowed_union(m, n, n + w - 1)
+        inter = jnp.sum(l1 & l2, axis=-1).astype(jnp.float32)
+        union = jnp.sum(l1 | l2, axis=-1).astype(jnp.float32)
+        return jnp.where(union > 0, 1.0 - inter / jnp.maximum(union, 1.0),
+                         0.0)
+
+    packed_fn = jax.jit(lambda m: tsa2_signal(m, w))
+    bitplane_fn = jax.jit(lambda m: tsa2_signal(m, w, impl="bitplane"))
+    oracle_fn = jax.jit(oracle_signal)
+
+    p_secs, d_packed = time_fn(packed_fn, masks, iters=iters)
+    b_secs, d_bitplane = time_fn(bitplane_fn, masks, iters=iters)
+    o_secs, d_oracle = time_fn(oracle_fn, masks, iters=iters)
+    k_secs, d_kernel = time_fn(window_jaccard, masks, valid, w=w, iters=iters)
+
+    d_identical = (np.array_equal(np.asarray(d_packed),
+                                  np.asarray(d_bitplane))
+                   and np.array_equal(np.asarray(d_packed),
+                                      np.asarray(d_oracle))
+                   and np.array_equal(np.asarray(d_packed),
+                                      np.asarray(d_kernel)))
+
+    seg_p = tsa2(masks, valid, w, tau, maxS)
+    seg_k = tsa2(masks, valid, w, tau, maxS, use_kernel=True)
+    cut_identical = all(
+        np.array_equal(np.asarray(getattr(seg_p, f)),
+                       np.asarray(getattr(seg_k, f)))
+        for f in ("cut", "sub_local", "num_subs", "score"))
+
+    def hlo_of(fn):
+        return fn.lower(masks).compile().as_text()
+
+    hlo_packed = hlo_of(packed_fn)
+    hlo_bitplane = hlo_of(bitplane_fn)
+    hlo_oracle = hlo_of(oracle_fn)
+
+    # the 32x expansion fingerprint: a [T, M, 32]-element int32 buffer
+    # (one bit-plane chunk) — must be gone from the packed path's HLO
+    chunk_elems = T * M * 32
+    fp_packed = find_buffers_with_elements(hlo_packed, chunk_elems,
+                                           dtypes=("s32",))
+    fp_bitplane = find_buffers_with_elements(hlo_bitplane, chunk_elems,
+                                             dtypes=("s32",))
+    peak_packed = peak_buffer_stats(hlo_packed)
+    peak_bitplane = peak_buffer_stats(hlo_bitplane)
+    peak_oracle = peak_buffer_stats(hlo_oracle)
+
+    rec = {
+        "shape": {"T": T, "M": M, "W": W, "w": w, "C": W * 32},
+        "packed_us": p_secs * 1e6,
+        "bitplane_chunked_us": b_secs * 1e6,
+        "bitplane_oracle_us": o_secs * 1e6,
+        "kernel_us": k_secs * 1e6,
+        "d_identical": bool(d_identical),
+        "cut_identical": bool(cut_identical),
+        "bitplane_fingerprint_in_packed": len(fp_packed),
+        "bitplane_fingerprint_in_bitplane": len(fp_bitplane),
+        "peak_packed": peak_packed["largest"],
+        "peak_bitplane_chunked": peak_bitplane["largest"],
+        "peak_bitplane_oracle": peak_oracle["largest"],
+        "peak_reduction_vs_chunked_x": (
+            peak_bitplane["largest_bytes"]
+            / max(peak_packed["largest_bytes"], 1)),
+        "peak_reduction_x": (peak_oracle["largest_bytes"]
+                             / max(peak_packed["largest_bytes"], 1)),
+        "interface_packed": interface_buffer_stats(hlo_packed)["largest"],
+    }
+    csv_row("seg_tsa2_packed", rec["packed_us"],
+            f"peak={peak_packed['largest_bytes']}B")
+    csv_row("seg_tsa2_bitplane_chunked", rec["bitplane_chunked_us"],
+            f"peak={peak_bitplane['largest_bytes']}B")
+    csv_row("seg_tsa2_kernel_interpret", rec["kernel_us"],
+            f"identical={d_identical}")
+    csv_row("seg_peak_reduction", rec["peak_reduction_x"],
+            f"oracle={peak_oracle['largest_bytes']}B;"
+            f"packed={peak_packed['largest_bytes']}B")
+    return rec
+
+
 def bench_pipeline(smoke: bool = False, out_dir: str = ".") -> dict:
     """Fused streaming vs materializing DSC pipeline: per-stage wall-clock,
     peak-allocation estimates, and the join-cube elimination proof.
@@ -237,7 +351,21 @@ def bench_pipeline(smoke: bool = False, out_dir: str = ".") -> dict:
     e2e["fused_us"], out_f = time_fn(
         lambda: run_dsc(batch, params, mode="fused", fused_tiles=ftiles),
         iters=2)
+    e2e["seg_kernel_us"], out_sk = time_fn(
+        lambda: run_dsc(batch, params, seg_use_kernel=True), iters=2)
     e2e = {k: v * 1e6 for k, v in e2e.items()}
+
+    # segmentation gate: bit-plane vs packed TSA2 (fixed W=8 instance)
+    # plus e2e label/cut identity of the Pallas segmentation kernel path
+    segmentation = bench_segmentation(w=params.w, tau=params.tau,
+                                      maxS=maxS, iters=2)
+    segmentation["e2e_label_identical"] = all(
+        bool(np.array_equal(np.asarray(getattr(out_sk.result, f)),
+                            np.asarray(getattr(out_ref.result, f))))
+        for f in ("member_of", "is_rep", "is_outlier"))
+    segmentation["e2e_cut_identical"] = bool(
+        np.array_equal(np.asarray(out_sk.seg.cut),
+                       np.asarray(out_ref.seg.cut)))
 
     parity = {
         "member_of": bool((np.asarray(out_f.result.member_of)
@@ -316,6 +444,7 @@ def bench_pipeline(smoke: bool = False, out_dir: str = ".") -> dict:
         "parity": parity,
         "memory": mem,
         "clustering": clustering,
+        "segmentation": segmentation,
     }
     for mode, st in stages.items():
         for stage, us in st.items():
@@ -370,6 +499,25 @@ def bench_pipeline(smoke: bool = False, out_dir: str = ".") -> dict:
         f"gate: serial-step reduction below 8x: "
         f"{gate['sequential_iterations']} sequential steps vs "
         f"{gate['rounds_executed']} rounds")
+    # Segmentation gate.  Deterministic structural claims only: cut/d
+    # identity across all three signal paths, no [T, M, 32] int32
+    # bit-plane chunk anywhere in the packed HLO, and a >=8x peak-buffer
+    # reduction vs the bit-plane oracle at the fixed W=8 gate shape.
+    # Wall-clock recorded as trajectory data, never asserted (same
+    # stance as the fused-join and clustering gates).
+    sg = segmentation
+    assert sg["d_identical"], "packed TSA2 signal diverged from bit-plane"
+    assert sg["cut_identical"], "TSA2 kernel cuts diverged from jnp engine"
+    assert sg["e2e_label_identical"] and sg["e2e_cut_identical"], (
+        "seg_use_kernel pipeline diverged from the reference")
+    assert sg["bitplane_fingerprint_in_packed"] == 0, (
+        f"[T, M, 32] int32 bit-plane chunks in the packed HLO: "
+        f"{sg['bitplane_fingerprint_in_packed']}")
+    assert sg["bitplane_fingerprint_in_bitplane"] > 0, (
+        "sanity: the bit-plane path's HLO should hold the chunk")
+    assert sg["peak_reduction_x"] >= 8.0, (
+        f"packed segmentation peak-buffer reduction "
+        f"{sg['peak_reduction_x']:.1f}x is below the 8x target")
     return rec
 
 

@@ -44,6 +44,7 @@ from repro.core.geometry import filter_delta_t
 from repro.core.partitioning import PartitionedBatch
 from repro.core.refine import refine_states
 from repro.core.similarity import build_subtraj_table_arrays, finalize_sim
+from repro.core.voting import normalized_voting
 from repro.core.types import ClusteringResult, DSCParams, JoinResult, SubtrajTable
 from repro.utils.compat import shard_map as shard_map_compat
 from repro.utils.tree import pytree_dataclass
@@ -129,6 +130,7 @@ def build_dsc_program(
     sim_dtype: str = "f32",         # "f32" | "bf16" collective payload
     cluster_engine: str = "rounds",  # "rounds" | "sequential" (oracle)
     cluster_use_kernel: bool = False,  # Pallas tile kernels for phase 5
+    seg_use_kernel: bool = False,    # Pallas TSA2 Jaccard kernel, phase 3
 ):
     """Build the shard_map program (not yet jitted) for ``parts`` shapes.
 
@@ -165,7 +167,13 @@ def build_dsc_program(
     ``cluster_use_kernel=True`` backs the round engine with the Pallas
     tile kernels (``repro.kernels.cluster``) inside each partition's
     shard — the accelerator path; the jnp formulation is faster on
-    CPU."""
+    CPU.
+
+    ``seg_use_kernel=True`` runs phase 3's TSA2 Jaccard signal through
+    the fused Pallas segmentation kernel (``repro.kernels.jaccard``)
+    inside each shard instead of the jnp packed-word engine —
+    bit-identical cuts and labels (DESIGN.md §7); a no-op under
+    ``tsa1``."""
     if mode not in ("materialize", "fused"):
         raise ValueError(f"unknown mode {mode!r}")
     if cluster_engine not in ("rounds", "sequential"):
@@ -323,13 +331,15 @@ def build_dsc_program(
 
         # ---------------- phase 3: segmentation (Job 1 reduce) ----------
         if params.segmentation == "tsa1":
-            vmax = jnp.max(jnp.where(c_v, c_vote, 0.0), axis=1, keepdims=True)
-            nvote = jnp.where(c_v, c_vote / jnp.maximum(vmax, 1e-12), 0.0)
+            # Eq. 5 lives in exactly one place: the single-host voting op
+            # applies per-trajectory max-normalization verbatim here
+            nvote = normalized_voting(c_vote, c_v)
             seg = seg_mod.tsa1(nvote, c_v, params.w, params.tau, maxS)
         else:
             c_masks = jnp.take_along_axis(
                 g_masks, order[..., None], axis=1)
-            seg = seg_mod.tsa2(c_masks, c_v, params.w, params.tau, maxS)
+            seg = seg_mod.tsa2(c_masks, c_v, params.w, params.tau, maxS,
+                               use_kernel=seg_use_kernel)
 
         table_l = build_subtraj_table_arrays(
             c_t, c_v, seg.sub_local, c_vote, maxS)         # S_l = Tl*maxS

@@ -51,7 +51,7 @@ class DSCOutput:
 
 def _finish(batch, params, join, vote, masks, tile_ids=None,
             fused_tiles=None, cluster_engine="rounds",
-            cluster_use_kernel=False) -> DSCOutput:
+            cluster_use_kernel=False, seg_use_kernel=False) -> DSCOutput:
     """Segmentation onward — shared by every join/vote front-end."""
     nvote = voting.normalized_voting(vote, batch.valid)
     if params.segmentation == "tsa1":
@@ -59,7 +59,8 @@ def _finish(batch, params, join, vote, masks, tile_ids=None,
                                 params.max_subtrajs_per_traj)
     else:
         seg = segmentation.tsa2(masks, batch.valid, params.w, params.tau,
-                                params.max_subtrajs_per_traj)
+                                params.max_subtrajs_per_traj,
+                                use_kernel=seg_use_kernel)
 
     table = similarity.build_subtraj_table(
         batch, seg, vote, params.max_subtrajs_per_traj)
@@ -84,11 +85,13 @@ def _finish(batch, params, join, vote, masks, tile_ids=None,
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "use_index",
                                              "cluster_engine",
-                                             "cluster_use_kernel"))
+                                             "cluster_use_kernel",
+                                             "seg_use_kernel"))
 def _run_dsc_materialize(batch: TrajectoryBatch, params: DSCParams,
                          use_kernel: bool, use_index: bool,
                          cluster_engine: str,
-                         cluster_use_kernel: bool) -> DSCOutput:
+                         cluster_use_kernel: bool,
+                         seg_use_kernel: bool) -> DSCOutput:
     if use_kernel:
         from repro.kernels.stjoin import ops as stjoin_ops
         join = stjoin_ops.subtrajectory_join(
@@ -102,14 +105,17 @@ def _run_dsc_materialize(batch: TrajectoryBatch, params: DSCParams,
              if params.segmentation == "tsa2" else None)
     return _finish(batch, params, join, vote, masks,
                    cluster_engine=cluster_engine,
-                   cluster_use_kernel=cluster_use_kernel)
+                   cluster_use_kernel=cluster_use_kernel,
+                   seg_use_kernel=seg_use_kernel)
 
 
 @functools.partial(jax.jit, static_argnames=("cluster_engine",
-                                             "cluster_use_kernel"))
+                                             "cluster_use_kernel",
+                                             "seg_use_kernel"))
 def _run_dsc_from_join(batch: TrajectoryBatch, params: DSCParams,
                        join: JoinResult, cluster_engine: str = "rounds",
-                       cluster_use_kernel: bool = False) -> DSCOutput:
+                       cluster_use_kernel: bool = False,
+                       seg_use_kernel: bool = False) -> DSCOutput:
     """Materializing tail for a join produced outside the jit boundary
     (the host-planned index-pruned Pallas join)."""
     vote = voting.point_voting(join)
@@ -117,7 +123,8 @@ def _run_dsc_from_join(batch: TrajectoryBatch, params: DSCParams,
              if params.segmentation == "tsa2" else None)
     return _finish(batch, params, join, vote, masks,
                    cluster_engine=cluster_engine,
-                   cluster_use_kernel=cluster_use_kernel)
+                   cluster_use_kernel=cluster_use_kernel,
+                   seg_use_kernel=seg_use_kernel)
 
 
 def _tile_kwargs(fused_tiles):
@@ -130,11 +137,13 @@ def _tile_kwargs(fused_tiles):
 
 @functools.partial(jax.jit, static_argnames=("fused_tiles",
                                              "cluster_engine",
-                                             "cluster_use_kernel"))
+                                             "cluster_use_kernel",
+                                             "seg_use_kernel"))
 def _run_dsc_fused(batch: TrajectoryBatch, params: DSCParams,
                    tile_ids=None, fused_tiles=None,
                    cluster_engine: str = "rounds",
-                   cluster_use_kernel: bool = False) -> DSCOutput:
+                   cluster_use_kernel: bool = False,
+                   seg_use_kernel: bool = False) -> DSCOutput:
     from repro.kernels.stjoin import ops as stjoin_ops
     vote, masks = stjoin_ops.stjoin_vote_fused_arrays(
         batch.x, batch.y, batch.t, batch.valid, batch.traj_id,
@@ -144,7 +153,8 @@ def _run_dsc_fused(batch: TrajectoryBatch, params: DSCParams,
         **_tile_kwargs(fused_tiles))
     return _finish(batch, params, None, vote, masks, tile_ids=tile_ids,
                    fused_tiles=fused_tiles, cluster_engine=cluster_engine,
-                   cluster_use_kernel=cluster_use_kernel)
+                   cluster_use_kernel=cluster_use_kernel,
+                   seg_use_kernel=seg_use_kernel)
 
 
 def run_dsc(batch: TrajectoryBatch, params: DSCParams,
@@ -152,7 +162,8 @@ def run_dsc(batch: TrajectoryBatch, params: DSCParams,
             mode: str = "materialize",
             fused_tiles: tuple[int, int, int] | None = None,
             cluster_engine: str = "rounds",
-            cluster_use_kernel: bool = False) -> DSCOutput:
+            cluster_use_kernel: bool = False,
+            seg_use_kernel: bool = False) -> DSCOutput:
     """Run the full DSC pipeline on one host / one partition.
 
     ``mode="fused"`` streams the join (no ``[T, M, C]`` cube;
@@ -169,6 +180,10 @@ def run_dsc(batch: TrajectoryBatch, params: DSCParams,
     (``repro.kernels.cluster``) — the accelerator path; the default jnp
     formulation is faster on CPU, where the kernels run in interpret
     mode.
+    ``seg_use_kernel=True`` computes the TSA2 Jaccard signal through the
+    fused Pallas segmentation kernel (``repro.kernels.jaccard``) instead
+    of the jnp packed-word engine — bit-identical cuts, segmentations,
+    and downstream labels (DESIGN.md §7); a no-op under ``tsa1``.
     """
     if mode not in ("materialize", "fused"):
         raise ValueError(f"unknown mode {mode!r}")
@@ -188,7 +203,8 @@ def run_dsc(batch: TrajectoryBatch, params: DSCParams,
             fused_tiles = (plan.rows, plan.bc, plan.bm)
         return _run_dsc_fused(batch, params, tile_ids, fused_tiles,
                               cluster_engine=cluster_engine,
-                              cluster_use_kernel=cluster_use_kernel)
+                              cluster_use_kernel=cluster_use_kernel,
+                              seg_use_kernel=seg_use_kernel)
     if use_index and use_kernel:
         # grid-pruned Pallas join: host-side planning pass, then jitted tail
         from repro.kernels.stjoin import ops as stjoin_ops
@@ -197,9 +213,11 @@ def run_dsc(batch: TrajectoryBatch, params: DSCParams,
             use_index=True)
         return _run_dsc_from_join(batch, params, join,
                                   cluster_engine=cluster_engine,
-                                  cluster_use_kernel=cluster_use_kernel)
+                                  cluster_use_kernel=cluster_use_kernel,
+                                  seg_use_kernel=seg_use_kernel)
     return _run_dsc_materialize(batch, params, use_kernel, use_index,
-                                cluster_engine, cluster_use_kernel)
+                                cluster_engine, cluster_use_kernel,
+                                seg_use_kernel)
 
 
 def cluster_summary(out: DSCOutput) -> dict:

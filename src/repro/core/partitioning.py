@@ -34,6 +34,37 @@ class PartitionedBatch:
         return self.x.shape[0]
 
 
+def _float_order_bits(i: np.ndarray) -> np.ndarray:
+    """Monotone involution on float64 *bit patterns*: IEEE-754 total order.
+
+    ``key = bits ^ ((bits >> 63) & 0x7FF...F)`` sorts int64 keys exactly
+    like the floats they encode.  The xor mask never touches the sign
+    bit, so applying the map twice is the identity: the same function
+    decodes keys back to bit patterns.  NB the total order gives -0.0 and
+    +0.0 *distinct* keys (-1 and 0) while ``nextafter`` treats them as
+    one value — ``_float_rank`` collapses that pair.
+    """
+    i = np.asarray(i, np.int64)
+    return i ^ ((i >> 63) & np.int64(0x7FFFFFFFFFFFFFFF))
+
+
+def _float_rank(v: np.ndarray) -> np.ndarray:
+    """float64 -> int64 rank with ``np.nextafter(x, inf) == rank(x) + 1``
+    for every ``x < inf`` — which turns the duplicate-edge bump loop into
+    one ``np.maximum.accumulate``.  Built from the total-order key by
+    merging the two zero keys (ranks are the key shifted up by one on the
+    negative side), since ``nextafter(-0.0, inf)`` is the smallest
+    subnormal, not +0.0.  ``_rank_float`` inverts (the zero class decodes
+    to +0.0, == -0.0 under float comparison)."""
+    key = _float_order_bits(np.asarray(v, np.float64).view(np.int64))
+    return key + (key < 0)
+
+
+def _rank_float(rank: np.ndarray) -> np.ndarray:
+    key = np.where(rank >= 0, rank, rank - 1)
+    return _float_order_bits(key).view(np.float64)
+
+
 def equi_depth_edges(times: np.ndarray, P: int,
                      sample: int | None = 100_000,
                      seed: int = 0) -> np.ndarray:
@@ -44,10 +75,15 @@ def equi_depth_edges(times: np.ndarray, P: int,
         times = rng.choice(times, size=sample, replace=False)
     qs = np.quantile(times, np.linspace(0.0, 1.0, P + 1))
     qs[0], qs[-1] = -np.inf, np.inf
-    # guard against duplicate edges on highly skewed data
-    for i in range(1, P):
-        if qs[i] <= qs[i - 1]:
-            qs[i] = np.nextafter(qs[i - 1], np.inf)
+    # guard against duplicate edges on highly skewed data: the sequential
+    # rule r[i] = max(qs[i], nextafter(r[i-1])) is, in rank space
+    # (nextafter == +1), the scan r[i] - i = max_{j<=i}(rank[j] - j) — one
+    # maximum.accumulate instead of the per-edge Python loop (equality
+    # with the loop, under float comparison, is pinned by
+    # tests/test_partition.py, -0.0/subnormal edges included).
+    rank = _float_rank(qs[:P])
+    idx = np.arange(P, dtype=np.int64)
+    qs[:P] = _rank_float(np.maximum.accumulate(rank - idx) + idx)
     return qs.astype(np.float64)
 
 
@@ -66,25 +102,35 @@ def partition_batch(batch: TrajectoryBatch, P: int, *, pad_mp_to: int = 8,
     pidx = np.clip(pidx, 0, P - 1)
     pidx = np.where(v, pidx, -1)
 
-    counts = np.zeros((P, T), np.int64)
-    for p in range(P):
-        counts[p] = (pidx == p).sum(axis=1)
+    # one argsort-by-(partition, row, time-position) + scatter instead of
+    # the O(P*T) per-cell np.nonzero double loop (equality with the loop
+    # version is pinned by tests/test_partition.py).  Valid flat indices
+    # are already (row, m)-ordered, so a stable sort by partition alone
+    # yields (p, r, m) order — m order is what the loop's np.nonzero
+    # produced per cell.
+    rows = np.broadcast_to(np.arange(T)[:, None], (T, M))
+    flat = np.nonzero(v.ravel())[0]
+    order = flat[np.argsort(pidx.ravel()[flat], kind="stable")]
+    p_of = pidx.ravel()[order]
+    r_of = rows.ravel()[order]
+    grp = p_of * T + r_of                       # contiguous ascending groups
+    counts = np.bincount(grp, minlength=P * T).reshape(P, T)
     Mp = int(counts.max(initial=1))
     Mp = max(pad_mp_to, ((Mp + pad_mp_to - 1) // pad_mp_to) * pad_mp_to)
+
+    # slot within the (partition, row) cell: global position minus the
+    # cell's start (the exclusive cumulative count of earlier cells)
+    start = np.concatenate(([0], np.cumsum(counts.ravel())))[grp]
+    slot = np.arange(order.size) - start
 
     px = np.zeros((P, T, Mp), np.float32)
     py = np.zeros((P, T, Mp), np.float32)
     pt = np.zeros((P, T, Mp), np.float32)
     pv = np.zeros((P, T, Mp), bool)
-    for p in range(P):
-        for r in range(T):
-            sel = np.nonzero(pidx[r] == p)[0]
-            m = len(sel)
-            if m:
-                px[p, r, :m] = x[r, sel]
-                py[p, r, :m] = y[r, sel]
-                pt[p, r, :m] = t[r, sel]
-                pv[p, r, :m] = True
+    px[p_of, r_of, slot] = x.ravel()[order]
+    py[p_of, r_of, slot] = y.ravel()[order]
+    pt[p_of, r_of, slot] = t.ravel()[order]
+    pv[p_of, r_of, slot] = True
 
     finite_lo = np.where(np.isfinite(edges[:-1]), edges[:-1],
                          t[v].min() - 1.0)

@@ -13,6 +13,18 @@ signal-segmentation literature the paper cites [16, 17].
 
 TSA1 consumes the normalized voting vector (Eq. 5); TSA2 consumes per-point
 neighbor *sets* (bit-packed) and uses windowed-union Jaccard dissimilarity.
+
+All window math runs on the shared monoid sliding-window engine
+(``repro.core.windows``, DESIGN.md §7): TSA1's window means are two reads
+of one prefix sum, the local-max test is the two-pass block cummax, and
+TSA2's set unions are the *same* block-scan trick applied to bit-packed
+uint32 words — a dense packed-word sweep with no 32x bit-plane expansion
+and no serial fold over the word axis.  The retained bit-plane
+formulations (``_windowed_union``, ``_window_overlap_counts_bitplane``)
+are regression oracles only.  ``tsa2(..., use_kernel=True)`` computes the
+Jaccard signal through the fused Pallas kernel
+(``repro.kernels.jaccard``) instead of the jnp engine — bit-identical
+output either way.
 """
 from __future__ import annotations
 
@@ -20,59 +32,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.types import SubtrajSegmentation
+from repro.core.windows import sliding_reduce, window_pair
 
 
 def _window_means(sig: jnp.ndarray, valid: jnp.ndarray, w: int):
     """Means of W1=[n-w, n-1] and W2=[n, n+w-1] at every n; [T, M] each."""
     x = jnp.where(valid, sig, 0.0)
-    csum = jnp.cumsum(x, axis=1)
-    cnt = jnp.cumsum(valid.astype(jnp.float32), axis=1)
-
-    def wsum(c, lo, hi):  # sum over [lo, hi] inclusive, per position
-        M = c.shape[1]
-        hi_v = jnp.where(
-            (hi >= 0)[None, :],
-            jnp.take_along_axis(
-                c, jnp.clip(hi, 0, M - 1)[None, :].repeat(c.shape[0], 0),
-                axis=1),
-            0.0)
-        lo_v = jnp.where(
-            (lo > 0)[None, :],
-            jnp.take_along_axis(
-                c, jnp.clip(lo - 1, 0, M - 1)[None, :].repeat(c.shape[0], 0),
-                axis=1),
-            0.0)
-        return hi_v - lo_v
-
-    M = sig.shape[1]
-    n = jnp.arange(M)
-    s1 = wsum(csum, n - w, n - 1)
-    c1 = wsum(cnt, n - w, n - 1)
-    s2 = wsum(csum, n, n + w - 1)
-    c2 = wsum(cnt, n, n + w - 1)
-    m1 = s1 / jnp.maximum(c1, 1.0)
-    m2 = s2 / jnp.maximum(c2, 1.0)
-    return m1, m2
-
-
-def _neighbor_max_left(d: jnp.ndarray, k: int) -> jnp.ndarray:
-    """Per position ``n``: max of ``d[n-k .. n-1]`` (−inf outside), via the
-    two-pass block cummax trick — an O(M) sliding-window max with no
-    ``[T, M, k]`` intermediate.  Any window of size ``k`` spans at most two
-    ``k``-aligned blocks, so it is the max of one block-suffix cummax and
-    one block-prefix cummax."""
-    T, M = d.shape
-    nb = -(-M // k)
-    y = jnp.pad(d, ((0, 0), (0, nb * k - M)), constant_values=-jnp.inf)
-    blk = y.reshape(T, nb, k)
-    pre = jax.lax.cummax(blk, axis=2).reshape(T, nb * k)
-    suf = jax.lax.cummax(blk, axis=2, reverse=True).reshape(T, nb * k)
-    n = jnp.arange(M)
-    start = jnp.clip(n - k + 1, 0, None)
-    incl = jnp.where(n >= k - 1,                       # max of d[n-k+1 .. n]
-                     jnp.maximum(suf[:, start], pre[:, :M]), pre[:, :M])
-    return jnp.concatenate(
-        [jnp.full((T, 1), -jnp.inf, d.dtype), incl[:, :-1]], axis=1)
+    cnt = valid.astype(jnp.float32)
+    s1, s2 = window_pair(x, w, "sum")
+    c1, c2 = window_pair(cnt, w, "sum")
+    return s1 / jnp.maximum(c1, 1.0), s2 / jnp.maximum(c2, 1.0)
 
 
 def _local_max_cuts(d: jnp.ndarray, valid: jnp.ndarray, w: int, tau,
@@ -81,9 +50,9 @@ def _local_max_cuts(d: jnp.ndarray, valid: jnp.ndarray, w: int, tau,
 
     The windowed maximum over [n-w+1, n+w-1] splits into the left-neighbor
     max (strict-left tie break: ``d[n]`` must beat it strictly) and the
-    right-neighbor max (``>=`` suffices); both come from the O(M)
-    prefix/suffix cummax pass instead of stacking 2w-1 shifted copies
-    (equality with the stacked formulation is pinned by
+    right-neighbor max (``>=`` suffices); both are O(M) prefix/suffix
+    block-cummax windows from the shared engine instead of stacking 2w-1
+    shifted copies (equality with the stacked formulation is pinned by
     ``tests/test_segmentation.py``)."""
     T, M = d.shape
     n = jnp.arange(M)
@@ -91,13 +60,8 @@ def _local_max_cuts(d: jnp.ndarray, valid: jnp.ndarray, w: int, tau,
     admissible = (n[None, :] >= w) & (n[None, :] <= count[:, None] - w - 1)
     d = jnp.where(valid & admissible, d, -jnp.inf)
 
-    pads = w - 1
-    if pads > 0:
-        left = _neighbor_max_left(d, pads)
-        right = jnp.flip(_neighbor_max_left(jnp.flip(d, axis=1), pads),
-                         axis=1)
-    else:
-        left = right = jnp.full_like(d, -jnp.inf)
+    left = sliding_reduce(d, -(w - 1), -1, "max")
+    right = sliding_reduce(d, 1, w - 1, "max")
     is_max = (d > left) & (d >= right)
     return is_max & (d > tau) & admissible & valid
 
@@ -126,15 +90,12 @@ def tsa1(norm_vote: jnp.ndarray, valid: jnp.ndarray, w: int, tau,
 
 
 def _windowed_union(masks: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray):
-    """OR-reduce packed masks over index window [lo, hi] per position.
+    """Bit-plane oracle: OR-reduce packed masks over index window [lo, hi].
 
-    ``masks``: [T, M, W] uint32. Windowed OR via prefix/suffix block trick
-    is implemented in the Pallas kernel; the reference path uses a
-    cumulative *count* per bit (OR of 0/1 bits == count > 0), expanding
-    every word to 32 bit-planes at once ([T, M, W*32]).  Callers that only
-    need aggregate counts should go through ``_window_overlap_counts``,
-    which feeds this one word at a time to bound memory; the full
-    expansion here doubles as the regression oracle.
+    Expands every uint32 word to 32 int32 bit-planes at once
+    (``[T, M, W*32]``) and reduces via cumulative counts (OR of 0/1 bits
+    == count > 0).  This is the pinned regression oracle for the packed
+    windowed-OR production path — never call it from the pipeline.
     """
     T, M, W = masks.shape
     B = W * 32
@@ -152,17 +113,16 @@ def _windowed_union(masks: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray):
     return (hi_v - lo_v) > 0                                     # [T, M, B]
 
 
-def _window_overlap_counts(masks: jnp.ndarray, w: int):
-    """Per-position W1/W2 set-union intersection and union cardinalities.
+def _window_overlap_counts_bitplane(masks: jnp.ndarray, w: int):
+    """Bit-plane chunked W1/W2 intersection and union cardinalities.
 
-    The naive reference expanded all ``W * 32`` bit-planes to an int32
-    cumsum at once — a ``[T, M, W*32]`` intermediate that dwarfs the packed
-    masks by 128x and made TSA2 un-runnable at benchmark shapes.  The
-    Jaccard numerator/denominator are plain sums over bits, so a
-    ``fori_loop`` folds one 32-bit plane chunk at a time: peak extra memory
-    is ``[T, M, 32]`` int32 and the traced graph holds ONE copy of the
-    chunk body regardless of W.  Output equality with the all-at-once
-    expansion is pinned by ``tests/test_segmentation.py``.
+    The pre-packed-engine production path, retained as a regression
+    oracle and the bench comparator: a ``fori_loop`` folds one 32-bit
+    plane chunk at a time, so peak extra memory is ``[T, M, 32]`` int32
+    per word-step — 32x the packed masks — and the W iterations form a
+    serial dependence chain.  Output equality with both the all-at-once
+    expansion and the packed engine is pinned by
+    ``tests/test_segmentation.py``.
     """
     T, M, W = masks.shape
     n = jnp.arange(M)
@@ -179,26 +139,74 @@ def _window_overlap_counts(masks: jnp.ndarray, w: int):
     return jax.lax.fori_loop(0, W, body, (zeros, zeros))
 
 
-def tsa2(packed_masks: jnp.ndarray, valid: jnp.ndarray, w: int, tau,
-         max_subs: int = 8) -> SubtrajSegmentation:
-    """Algorithm 3: composition-change segmentation (windowed Jaccard)."""
-    count = jnp.sum(valid, axis=1)
-    inter, union = _window_overlap_counts(packed_masks, w)
+def _window_overlap_counts(masks: jnp.ndarray, w: int):
+    """Per-position W1/W2 set-union intersection and union cardinalities.
+
+    Packed-word production path: bitwise OR is associative and idempotent,
+    so the windowed set-union is the engine's two-pass block OR-scan
+    applied directly to the ``[T, M, W]`` uint32 words, and the Jaccard
+    numerator/denominator are popcount sums over the W word axis.  No
+    bit-plane expansion, no serial fold over W: every intermediate is the
+    size of the packed masks themselves (32x fewer elements than one
+    bit-plane chunk, 32·W x fewer than the full expansion).
+    """
+    l1, l2 = window_pair(masks, w, "or")
+    pc = jax.lax.population_count
+    inter = jnp.sum(pc(l1 & l2), axis=-1, dtype=jnp.int32)
+    union = jnp.sum(pc(l1 | l2), axis=-1, dtype=jnp.int32)
+    return inter, union
+
+
+def tsa2_signal(packed_masks: jnp.ndarray, w: int, *,
+                impl: str = "packed") -> jnp.ndarray:
+    """TSA2's windowed-Jaccard dissimilarity ``d[n]`` from packed masks.
+
+    ``impl="packed"`` is the production packed-word engine;
+    ``impl="bitplane"`` the retained 32x-expanded chunked oracle.  Both
+    produce bit-identical ``d`` (same integer counts, same float ops) —
+    the bench gates on exactly that plus the structural memory win.
+    """
+    if impl == "packed":
+        inter, union = _window_overlap_counts(packed_masks, w)
+    elif impl == "bitplane":
+        inter, union = _window_overlap_counts_bitplane(packed_masks, w)
+    else:
+        raise ValueError(f"unknown tsa2 signal impl {impl!r}")
     inter = inter.astype(jnp.float32)
     union = union.astype(jnp.float32)
-    d = jnp.where(union > 0, 1.0 - inter / jnp.maximum(union, 1.0), 0.0)
+    return jnp.where(union > 0, 1.0 - inter / jnp.maximum(union, 1.0), 0.0)
+
+
+def tsa2(packed_masks: jnp.ndarray, valid: jnp.ndarray, w: int, tau,
+         max_subs: int = 8, *, use_kernel: bool = False) -> SubtrajSegmentation:
+    """Algorithm 3: composition-change segmentation (windowed Jaccard).
+
+    Masks at invalid positions are zeroed before the windowed union (the
+    pipeline's packed masks are already zero there; direct callers may
+    pass arbitrary words), so the jnp engine and the Pallas kernel
+    (``use_kernel=True``) are bit-identical everywhere, score included.
+    """
+    count = jnp.sum(valid, axis=1)
+    packed_masks = jnp.where(valid[..., None], packed_masks, jnp.uint32(0))
+    if use_kernel:
+        from repro.kernels.jaccard.ops import window_jaccard
+        d = window_jaccard(packed_masks, valid, w=w)
+    else:
+        d = tsa2_signal(packed_masks, w)
     cuts = _local_max_cuts(d, valid, w, tau, count)
     return _finalize(cuts, valid, jnp.where(valid, d, 0.0), max_subs)
 
 
 def segment(params_segmentation: str, *, norm_vote=None, packed_masks=None,
-            valid=None, w: int = 10, tau=0.4,
-            max_subs: int = 8) -> SubtrajSegmentation:
+            valid=None, w: int = 10, tau=0.4, max_subs: int = 8,
+            use_kernel: bool = False) -> SubtrajSegmentation:
     if params_segmentation == "tsa1":
         return tsa1(norm_vote, valid, w, tau, max_subs)
     if params_segmentation == "tsa2":
-        return tsa2(packed_masks, valid, w, tau, max_subs)
+        return tsa2(packed_masks, valid, w, tau, max_subs,
+                    use_kernel=use_kernel)
     raise ValueError(f"unknown segmentation {params_segmentation!r}")
 
 
-segment_jit = jax.jit(segment, static_argnums=(0,), static_argnames=("w", "max_subs"))
+segment_jit = jax.jit(segment, static_argnums=(0,),
+                      static_argnames=("w", "max_subs", "use_kernel"))

@@ -1,0 +1,150 @@
+"""Monoid sliding-window engine — one audited windowing primitive for the
+whole pipeline (DESIGN.md §7).
+
+Every windowed quantity TSA1/TSA2 need is a reduction of a per-position
+signal over the inclusive *offset* window ``[n + lo, n + hi]`` along the
+point axis (axis 1), with out-of-range positions contributing the monoid
+identity:
+
+    window means   (TSA1)  -> "sum"  over [n-w, n-1] and [n, n+w-1]
+    local-max test (both)  -> "max"  over [n-w+1, n-1] and [n+1, n+w-1]
+    set unions     (TSA2)  -> "or"   over [n-w, n-1] and [n, n+w-1],
+                              directly on bit-packed uint32 words
+
+``sliding_reduce`` dispatches on the algebra of the operator:
+
+* ``"sum"`` has a group inverse, so the window is two reads of one
+  prefix-sum array (cumsum + static shifts; no gather).
+* ``"max"`` / ``"or"`` are associative **and idempotent**, which is what
+  makes the two-pass block-scan trick exact: any window of length ``L``
+  spans at most two ``L``-aligned blocks, so its reduction is
+  ``op(block-suffix-scan at the window start, block-prefix-scan at the
+  window end)`` — and when the window happens to sit inside a single
+  block the two reads overlap, which idempotency absorbs (``a op a = a``).
+  Sums cannot use this (overlap double-counts), hence the dispatch.
+
+For ``"or"`` the trick applies verbatim to packed uint32 words: bitwise OR
+over words *is* per-bit OR, so a windowed set-union over ``[T, M, W]``
+masks costs O(M·W) word ops — no 32x bit-plane expansion, no serial loop
+over W (the win ``repro.core.segmentation`` TSA2 is built on).
+
+All entry points preserve trailing dims (``sig`` may be ``[T, M]`` or
+``[T, M, W]``); windows always slide along axis 1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_OPS = ("sum", "max", "or")
+
+
+def _identity_scalar(dtype, op: str):
+    if op in ("sum", "or"):
+        return jnp.zeros((), dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.asarray(-jnp.inf, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).min, dtype)
+
+
+def _fill(sig: jnp.ndarray, n: int, ident) -> jnp.ndarray:
+    """[T, n, *rest] block of the identity, matching ``sig``'s layout."""
+    shape = (sig.shape[0], n) + sig.shape[2:]
+    return jnp.full(shape, ident, sig.dtype)
+
+
+def _shift(x: jnp.ndarray, k: int, ident, axis: int = 1) -> jnp.ndarray:
+    """``x`` shifted so position ``n`` reads ``x[n - k]`` along ``axis``
+    (identity off-edge).  ``k`` is a static Python int."""
+    if k == 0:
+        return x
+    n = x.shape[axis]
+    kk = min(abs(k), n)
+    idx_lo = [slice(None)] * x.ndim
+    idx_hi = [slice(None)] * x.ndim
+    idx_lo[axis] = slice(0, kk)
+    pad = jnp.full_like(x[tuple(idx_lo)], ident)
+    if k > 0:
+        idx_hi[axis] = slice(0, n - kk)
+        return jnp.concatenate([pad, x[tuple(idx_hi)]], axis=axis)
+    idx_hi[axis] = slice(kk, None)
+    return jnp.concatenate([x[tuple(idx_hi)], pad], axis=axis)
+
+
+def _prefix_at(csum: jnp.ndarray, k: int) -> jnp.ndarray:
+    """``csum[:, n + k]`` with 0 below index 0 and the last column above
+    ``M - 1`` (a prefix sum saturates past the end)."""
+    M = csum.shape[1]
+    if k == 0:
+        return csum
+    if k < 0:
+        return _shift(csum, -k, 0)
+    kk = min(k, M)
+    edge = jnp.broadcast_to(csum[:, M - 1:M], csum[:, :kk].shape)
+    return jnp.concatenate([csum[:, kk:], edge], axis=1)
+
+
+def _block_scan(blk: jnp.ndarray, op: str, reverse: bool) -> jnp.ndarray:
+    """Inclusive scan along axis 2 of ``[T, nb, L, *rest]`` blocks."""
+    if op == "max":
+        return jax.lax.cummax(blk, axis=2, reverse=reverse)
+    # "or": Hillis–Steele doubling — log2(L) static shift+or steps
+    L = blk.shape[2]
+    sh = 1
+    while sh < L:
+        blk = blk | _shift(blk, sh if not reverse else -sh, 0, axis=2)
+        sh *= 2
+    return blk
+
+
+def sliding_reduce(sig: jnp.ndarray, lo: int, hi: int, op: str) -> jnp.ndarray:
+    """Reduce ``sig`` over the inclusive offset window ``[n+lo, n+hi]``.
+
+    ``lo``/``hi`` are static Python ints (either sign); positions outside
+    ``[0, M)`` contribute the identity (0 for sum/or, -inf for max).  An
+    empty window (``lo > hi``) returns the identity everywhere.  Output
+    shape == input shape; windows slide along axis 1.
+    """
+    if op not in _OPS:
+        raise ValueError(f"unknown window op {op!r}")
+    M = sig.shape[1]
+    ident = _identity_scalar(sig.dtype, op)
+    if lo > hi:
+        return jnp.full_like(sig, ident)
+
+    if op == "sum":
+        csum = jnp.cumsum(sig, axis=1)
+        return _prefix_at(csum, hi) - _prefix_at(csum, lo - 1)
+
+    # idempotent two-pass block scan.  First rebase: the window [n+lo,
+    # n+hi] of length L is the trailing window [m-L+1, m] read at
+    # m = n + hi, so compute incl[m] = reduce(sig[m-L+1 .. m]) once and
+    # shift.  incl needs indices up to M-1+hi when hi > 0 -> extend with
+    # the identity (exact: identity is absorbing for the tail).
+    L = hi - lo + 1
+    pad_r = max(hi, 0)
+    y = sig if pad_r == 0 else jnp.concatenate(
+        [sig, _fill(sig, pad_r, ident)], axis=1)
+    Mx = M + pad_r
+    nb = -(-Mx // L)
+    if nb * L > Mx:
+        y = jnp.concatenate([y, _fill(sig, nb * L - Mx, ident)], axis=1)
+    blk = y.reshape(y.shape[0], nb, L, *y.shape[2:])
+    pre = _block_scan(blk, op, reverse=False).reshape(y.shape)
+    suf = _block_scan(blk, op, reverse=True).reshape(y.shape)
+    # any L-window spans <= two L-aligned blocks: suffix of the first at
+    # the window start (a static right-shift by L-1) op prefix of the
+    # second at the window end.  Single-block windows read both scans over
+    # overlapping ranges — exact only because op is idempotent.
+    combine = jnp.maximum if op == "max" else jnp.bitwise_or
+    incl = combine(pre, _shift(suf, L - 1, ident))
+    if hi >= 0:
+        return incl[:, hi:hi + M]
+    return _shift(incl[:, :M], -hi, ident)
+
+
+def window_pair(sig: jnp.ndarray, w: int, op: str):
+    """The adjacent window pair every TSA algorithm slides:
+    ``W1 = [n-w, n-1]`` and ``W2 = [n, n+w-1]``.  Returns ``(r1, r2)``."""
+    return (sliding_reduce(sig, -w, -1, op),
+            sliding_reduce(sig, 0, w - 1, op))

@@ -10,7 +10,9 @@ Kernels:
   cluster   — round-parallel greedy clustering (Algorithm 4) round scan +
               claim-max over [S, S] tiles
   lcss      — weighted-LCSS dynamic program (Eq. 2), anti-diagonal wavefront
-  jaccard   — TSA2 sliding-window set-union Jaccard over bit-packed masks
+  jaccard   — the TSA2 segmentation kernel: packed windowed-OR + popcount
+              -> sliding-window Jaccard d[n] in one sweep
+              (``seg_use_kernel=True`` from every pipeline entry point)
   attention — flash attention for the LM serving path (optional)
 """
 

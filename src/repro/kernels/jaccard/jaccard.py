@@ -1,5 +1,8 @@
 """Pallas TPU kernel: TSA2's sliding-window set-union Jaccard dissimilarity.
 
+This is the segmentation kernel package's fused TSA2 sweep: packed
+windowed-OR + popcount -> Jaccard dissimilarity ``d[n]`` in one pass.
+
 Input: per-point neighbor sets, bit-packed as uint32 words ``[T, M, W]``
 (bit c of word c//32 set iff candidate trajectory c matches the point).
 For every position n the kernel forms the unions
@@ -7,14 +10,20 @@ For every position n the kernel forms the unions
     l1 = OR of masks[n-w .. n-1]        l2 = OR of masks[n .. n+w-1]
 
 and emits ``d[n] = 1 - popcount(l1 & l2) / popcount(l1 | l2)`` (Algorithm 3
-line 7).  The window OR is an unrolled sequence of ``w`` static shifts along
-the point axis — pure integer VPU work (no MXU), ``O(M * w * W)`` ops per
-trajectory; bit-packing gives a 32x reduction in both bytes and ops versus
-the boolean-expanded reference.
+line 7).  The window OR uses the same idempotent-monoid decomposition as
+``repro.core.windows`` (DESIGN.md §7), in its in-register doubling form:
+a trailing window of length ``c`` doubles to ``c + min(c, w - c)`` with a
+single static shift+OR, so the full window costs ``ceil(log2 w)``
+shift+OR steps over the resident ``[bt, M + w - 1, W]`` slab — pure
+integer VPU work (no MXU, no gathers), ``O(M * log(w) * W)`` ops per
+trajectory where the bit-expanded reference spends ``O(M * w * W * 32)``.
+Both windows fall out of ONE trailing-window array: ``l1[n] = incl[n-1]``
+and ``l2[n] = incl[n+w-1]`` — two more static shifts.
 
-Block layout: a [bt, M, W] slab per program instance (bt=8, M<=512, W<=32 ->
-512 KiB) — the whole trajectory must be resident because windows straddle
-tile borders.
+Block layout (stjoin tile conventions): the grid walks blocks of ``bt``
+whole trajectories; the whole point axis is resident per program instance
+(windows straddle any smaller tiling), so a block is ``[bt, M, W]``
+(bt=8, M<=512, W<=32 -> 512 KiB of VMEM).
 """
 from __future__ import annotations
 
@@ -29,27 +38,32 @@ def _kernel(masks_ref, out_d_ref, *, w: int):
     masks = masks_ref[...]                         # [bt, M, W] uint32
     bt, M, W = masks.shape
 
-    def shifted(k):
-        """masks shifted so position n reads masks[n - k] (zeros off-edge)."""
+    def shifted_right(a, k):
+        """``a`` shifted so position m reads ``a[m - k]`` (zeros off-edge)."""
         if k == 0:
-            return masks
-        if k > 0:
-            pad = jnp.zeros((bt, k, W), masks.dtype)
-            return jnp.concatenate([pad, masks[:, :M - k]], axis=1)
-        pad = jnp.zeros((bt, -k, W), masks.dtype)
-        return jnp.concatenate([masks[:, -k:], pad], axis=1)
+            return a
+        Ma = a.shape[1]
+        kk = min(k, Ma)
+        pad = jnp.zeros((bt, kk, W), a.dtype)
+        return jnp.concatenate([pad, a[:, :Ma - kk]], axis=1)
 
-    l1 = jnp.zeros_like(masks)
-    for k in range(1, w + 1):                      # W1 = [n-w, n-1]
-        l1 = l1 | shifted(k)
-    l2 = jnp.zeros_like(masks)
-    for k in range(0, w):                          # W2 = [n, n+w-1]
-        l2 = l2 | shifted(-k)
+    # trailing-window union incl[m] = OR(masks[max(m-w+1, 0) .. m]) on the
+    # slab extended by w-1 zero columns (zero is the OR identity, so the
+    # extension exactly models the off-end positions l2 reads)
+    x = masks if w <= 1 else jnp.concatenate(
+        [masks, jnp.zeros((bt, w - 1, W), masks.dtype)], axis=1)
+    incl, c = x, 1
+    while c < w:                                   # doubling windowed OR
+        step = min(c, w - c)
+        incl = incl | shifted_right(incl, step)
+        c += step
 
-    inter = jnp.sum(jax.lax.population_count(l1 & l2), axis=-1)
-    union = jnp.sum(jax.lax.population_count(l1 | l2), axis=-1)
-    inter = inter.astype(jnp.float32)
-    union = union.astype(jnp.float32)
+    l1 = shifted_right(incl, 1)[:, :M]             # W1 = [n-w, n-1]
+    l2 = incl[:, w - 1:w - 1 + M]                  # W2 = [n, n+w-1]
+
+    pc = jax.lax.population_count
+    inter = jnp.sum(pc(l1 & l2), axis=-1).astype(jnp.float32)
+    union = jnp.sum(pc(l1 | l2), axis=-1).astype(jnp.float32)
     out_d_ref[...] = jnp.where(
         union > 0, 1.0 - inter / jnp.maximum(union, 1.0), 0.0)
 

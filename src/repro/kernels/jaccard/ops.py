@@ -1,4 +1,13 @@
-"""Public wrapper for the sliding-window Jaccard kernel."""
+"""Public wrapper for the fused TSA2 segmentation kernel (windowed Jaccard).
+
+Padding-owning contract: callers hand raw ``[T, M, W]`` packed masks and
+the ``[T, M]`` validity mask; the wrapper zeroes invalid positions (zero
+is the OR identity, so padding never leaks into a window union) and the
+kernel pads the trajectory axis to whole ``bt`` blocks internally.  The
+returned ``d`` is bit-identical to the jnp packed engine
+(``repro.core.segmentation.tsa2_signal``) — ``tsa2(use_kernel=True)``
+relies on that.
+"""
 from __future__ import annotations
 
 import functools

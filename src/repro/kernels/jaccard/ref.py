@@ -1,4 +1,10 @@
-"""Pure-jnp oracle for the sliding-window Jaccard kernel (bit-expanded)."""
+"""Pure-jnp oracle for the TSA2 segmentation kernel (bit-expanded).
+
+Deliberately the *opposite* formulation from the production paths: every
+packed word is expanded to 32 booleans and the window union is the
+w-unrolled shift chain, so kernel/engine bugs cannot hide behind a shared
+derivation.  O(M * w * W * 32) work — test shapes only.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp

@@ -56,6 +56,10 @@ def main(argv=None):
                     help="back the round engine with the Pallas tile "
                          "kernels (accelerator path; interpret mode on "
                          "CPU)")
+    ap.add_argument("--seg-use-kernel", action="store_true",
+                    help="compute the TSA2 Jaccard signal with the fused "
+                         "Pallas segmentation kernel (bit-identical cuts; "
+                         "interpret mode on CPU; no-op under tsa1)")
     ap.add_argument("--segmentation", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -90,7 +94,8 @@ def main(argv=None):
                                   use_index=args.use_index,
                                   mode=args.mode,
                                   cluster_engine=args.cluster_engine,
-                                  cluster_use_kernel=args.cluster_use_kernel)
+                                  cluster_use_kernel=args.cluster_use_kernel,
+                                  seg_use_kernel=args.seg_use_kernel)
         res, table = out.result, out.table
         n_rep = int(np.asarray(res.is_rep).sum())
         n_out = int(np.asarray(res.is_outlier).sum())
@@ -103,7 +108,8 @@ def main(argv=None):
         out = run_dsc(batch, params, use_kernel=args.use_kernel,
                       use_index=args.use_index, mode=args.mode,
                       cluster_engine=args.cluster_engine,
-                      cluster_use_kernel=args.cluster_use_kernel)
+                      cluster_use_kernel=args.cluster_use_kernel,
+                      seg_use_kernel=args.seg_use_kernel)
         s = cluster_summary(out)
         log.info("DSC: %d clusters, %d outliers, RMSE %.4f, SSCR %.2f "
                  "in %.2fs", s["num_clusters"], len(s["outliers"]),

@@ -87,6 +87,14 @@ _DRIVER = textwrap.dedent("""
     report["p4_fused_vote_close"] = bool(np.allclose(
         np.asarray(out_f.vote), np.asarray(out.vote), atol=1e-4))
 
+    # fused Pallas TSA2 segmentation kernel: bit-identical labels to the
+    # jnp packed-word engine (tsa2 is the params' segmentation)
+    out_sk = run_dsc_distributed(parts, params, mesh, seg_use_kernel=True)
+    report["p4_seg_kernel_agree"] = bool(
+        (np.asarray(out_sk.result.member_of) == member_of).all()
+        and (np.asarray(out_sk.result.is_rep) == is_rep).all()
+        and (np.asarray(out_sk.result.is_outlier) == is_out).all())
+
     # sequential clustering oracle: the round-parallel per-partition
     # engine (the default above) must be label-identical
     out_s = run_dsc_distributed(parts, params, mesh,
@@ -147,6 +155,14 @@ def test_p4_fused_streaming_agrees(dist_report):
     """mode="fused" (no per-rank join cube) matches the materializing run."""
     assert dist_report["p4_fused_agree"] == 1.0
     assert dist_report["p4_fused_vote_close"]
+
+
+@pytest.mark.distributed
+@pytest.mark.slow
+def test_p4_seg_kernel_identical(dist_report):
+    """seg_use_kernel=True (fused Pallas TSA2 Jaccard kernel in phase 3)
+    is bit-identical to the jnp packed-word engine end to end."""
+    assert dist_report["p4_seg_kernel_agree"]
 
 
 @pytest.mark.distributed

@@ -1,11 +1,15 @@
-"""Sharding-rule unit tests: policies, divisibility fallbacks, data specs."""
+"""Sharding-rule unit tests: policies, divisibility fallbacks, data specs —
+plus the temporal-partitioning ingest pins (vectorized vs loop versions)."""
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from hypothesis import given, settings, strategies as st
 
 from repro.configs import ARCHITECTURES, get_arch
+from repro.core import partitioning as pz
+from repro.core.types import TrajectoryBatch
 from repro.distributed import partition
 from repro.models import transformer as tf
 
@@ -120,3 +124,115 @@ def test_decode_data_specs_batched():
     assert specs["cache"]["k"][1] == ("data",) or \
         specs["cache"]["k"][1] == "data"
     assert specs["cache"]["k"][3] == "model"          # kv=32 divides 16
+
+
+# ---------------------------------------------------------------------------
+# Temporal equi-depth partitioning ingest: the vectorized argsort+scatter
+# pass and the ordered-int duplicate-edge scan are pinned against the
+# original Python-loop formulations they replaced.
+# ---------------------------------------------------------------------------
+
+
+def _equi_depth_edges_loop(times, Pn, sample=100_000, seed=0):
+    """The former per-edge bump loop, kept as the regression oracle."""
+    times = np.asarray(times).ravel()
+    if sample is not None and times.size > sample:
+        rng = np.random.default_rng(seed)
+        times = rng.choice(times, size=sample, replace=False)
+    qs = np.quantile(times, np.linspace(0.0, 1.0, Pn + 1))
+    qs[0], qs[-1] = -np.inf, np.inf
+    for i in range(1, Pn):
+        if qs[i] <= qs[i - 1]:
+            qs[i] = np.nextafter(qs[i - 1], np.inf)
+    return qs.astype(np.float64)
+
+
+def _partition_batch_loop(batch, Pn, pad_mp_to=8, sample=100_000):
+    """The former O(P*T) per-cell np.nonzero double loop."""
+    x = np.asarray(batch.x)
+    y = np.asarray(batch.y)
+    t = np.asarray(batch.t)
+    v = np.asarray(batch.valid)
+    T, M = x.shape
+    edges = _equi_depth_edges_loop(t[v], Pn, sample=sample)
+    pidx = np.searchsorted(edges, t, side="right") - 1
+    pidx = np.clip(pidx, 0, Pn - 1)
+    pidx = np.where(v, pidx, -1)
+    counts = np.zeros((Pn, T), np.int64)
+    for p in range(Pn):
+        counts[p] = (pidx == p).sum(axis=1)
+    Mp = int(counts.max(initial=1))
+    Mp = max(pad_mp_to, ((Mp + pad_mp_to - 1) // pad_mp_to) * pad_mp_to)
+    px = np.zeros((Pn, T, Mp), np.float32)
+    py = np.zeros((Pn, T, Mp), np.float32)
+    pt = np.zeros((Pn, T, Mp), np.float32)
+    pv = np.zeros((Pn, T, Mp), bool)
+    for p in range(Pn):
+        for r in range(T):
+            sel = np.nonzero(pidx[r] == p)[0]
+            m = len(sel)
+            if m:
+                px[p, r, :m] = x[r, sel]
+                py[p, r, :m] = y[r, sel]
+                pt[p, r, :m] = t[r, sel]
+                pv[p, r, :m] = True
+    return px, py, pt, pv
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_equi_depth_edges_match_loop(seed):
+    """Rank-space maximum.accumulate == per-edge nextafter loop (float ==
+    semantics) — including all-duplicate and few-distinct-value time
+    arrays (cascading bumps) and data whose quantiles land on -0.0 or
+    subnormals, where the raw IEEE total order and nextafter disagree
+    (the -0.0/+0.0 key pair)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 60))
+    Pn = int(rng.integers(1, 9))
+    kind = seed % 6
+    if kind == 0:
+        times = rng.uniform(-100, 100, n)
+    elif kind == 1:
+        times = np.full(n, rng.uniform(0, 10))          # every edge collides
+    elif kind == 2:
+        times = rng.choice([0.0, 1.0, np.nextafter(1.0, 2.0), -5.0], n)
+    elif kind == 3:
+        times = rng.choice([-1e-323, -5e-324, -0.0, 0.0, 5e-324], n)
+    elif kind == 4:
+        times = np.full(n, -5e-324)    # bump chain crosses the zero class
+    else:
+        times = np.round(rng.uniform(0, 3, n))
+    got = pz.equi_depth_edges(times, Pn, sample=None)
+    want = _equi_depth_edges_loop(times, Pn, sample=None)
+    assert np.array_equal(got, want), (seed, got, want)
+    # the guard's actual contract: interior edges strictly increase
+    assert (np.diff(got[:-1]) > 0).all(), (seed, got)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_partition_batch_matches_loop(seed):
+    """argsort+scatter ingest == per-cell double loop, bit for bit —
+    slot order, padding, and all-invalid rows included."""
+    rng = np.random.default_rng(seed)
+    T, M = int(rng.integers(1, 10)), int(rng.integers(1, 28))
+    Pn = int(rng.integers(1, 6))
+    x = rng.uniform(0, 10, (T, M)).astype(np.float32)
+    y = rng.uniform(0, 10, (T, M)).astype(np.float32)
+    t = np.sort(rng.uniform(0, 50, (T, M)), axis=1).astype(np.float32)
+    if seed % 3 == 0:
+        t = np.round(t)                                 # duplicate times
+    v = rng.uniform(0, 1, (T, M)) > 0.3
+    if seed % 5 == 0:
+        v[0] = False                                    # all-invalid row
+    if not v.any():
+        v[0, 0] = True
+    batch = TrajectoryBatch(
+        x=jnp.asarray(x), y=jnp.asarray(y), t=jnp.asarray(t),
+        valid=jnp.asarray(v), traj_id=jnp.arange(T, dtype=jnp.int32))
+    got = pz.partition_batch(batch, Pn)
+    want = _partition_batch_loop(batch, Pn)
+    for g, w_, name in zip((got.x, got.y, got.t, got.valid), want,
+                           ("x", "y", "t", "valid")):
+        assert np.array_equal(np.asarray(g), w_), (seed, name)

@@ -5,9 +5,22 @@ import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from repro.core.segmentation import (_local_max_cuts, _window_overlap_counts,
-                                     _windowed_union, tsa1, tsa2)
+                                     _window_overlap_counts_bitplane,
+                                     _windowed_union, tsa1, tsa2, tsa2_signal)
 from repro.core.voting import neighbor_mask_packed
 from repro.core.types import JoinResult
+
+
+def _pack_bools(matched: np.ndarray) -> jnp.ndarray:
+    """[T, M, C] bool -> [T, M, ceil(C/32)] uint32 (same layout as
+    ``voting.neighbor_mask_packed``); C need not be a multiple of 32."""
+    T, M, C = matched.shape
+    W = -(-C // 32)
+    pad = np.zeros((T, M, W * 32 - C), bool)
+    bits = np.concatenate([matched, pad], axis=-1).reshape(T, M, W, 32)
+    weights = (np.uint32(1) << np.arange(32, dtype=np.uint32))
+    return jnp.asarray((bits.astype(np.uint32) * weights).sum(-1,
+                                                              dtype=np.uint32))
 
 
 def test_tsa1_detects_step_change():
@@ -93,22 +106,82 @@ def test_tsa2_partition_validity(seed):
 
 @given(st.integers(0, 2 ** 31 - 1))
 @settings(max_examples=10, deadline=None)
-def test_tsa2_bitplane_chunking_matches_full_expansion(seed):
-    """Regression for the TSA2 reference-path memory blow-up: the chunked
-    per-word inter/union accumulation must equal the all-at-once
+def test_tsa2_packed_and_chunked_match_full_expansion(seed):
+    """Both production-history paths — the packed windowed-OR engine and
+    the retained bit-plane chunked fold — must equal the all-at-once
     ``[T, M, W*32]`` expansion bit for bit."""
     rng = np.random.default_rng(seed)
     T, M, W, w = 2, 36, 3, 5
     masks = jnp.asarray(rng.integers(0, 2 ** 31, (T, M, W)).astype(np.uint32))
-    inter, union = _window_overlap_counts(masks, w)
 
     n = jnp.arange(M)
     l1 = _windowed_union(masks, n - w, n - 1)        # full [T, M, W*32]
     l2 = _windowed_union(masks, n, n + w - 1)
     want_inter = np.asarray(jnp.sum(l1 & l2, axis=-1))
     want_union = np.asarray(jnp.sum(l1 | l2, axis=-1))
-    assert (np.asarray(inter) == want_inter).all()
-    assert (np.asarray(union) == want_union).all()
+    for impl in (_window_overlap_counts, _window_overlap_counts_bitplane):
+        inter, union = impl(masks, w)
+        assert (np.asarray(inter) == want_inter).all(), impl.__name__
+        assert (np.asarray(union) == want_union).all(), impl.__name__
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_packed_windowed_or_vs_bitplane_oracle_property(seed):
+    """The packed-word engine equals the pinned bit-plane oracle across
+    the edge cases the block OR-scan has to get right: w=1, w >= M,
+    all-padding (zero-mask) rows, and C not a multiple of 32."""
+    rng = np.random.default_rng(seed)
+    T = int(rng.integers(1, 4))
+    M = int(rng.integers(2, 48))
+    C = int(rng.integers(1, 100))          # frequently not a multiple of 32
+    w = int(rng.choice([1, 2, 3, M, M + 4]))
+    matched = rng.uniform(0, 1, (T, M, C)) < 0.3
+    matched[0] = False                     # an all-padding trajectory
+    masks = _pack_bools(matched)
+
+    ip, up = _window_overlap_counts(masks, w)
+    ib, ub = _window_overlap_counts_bitplane(masks, w)
+    assert (np.asarray(ip) == np.asarray(ib)).all(), (seed, w)
+    assert (np.asarray(up) == np.asarray(ub)).all(), (seed, w)
+
+    d_p = np.asarray(tsa2_signal(masks, w))
+    d_b = np.asarray(tsa2_signal(masks, w, impl="bitplane"))
+    assert (d_p == d_b).all(), (seed, w)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_tsa2_kernel_matches_jnp_engine(seed):
+    """tsa2(use_kernel=True) — the fused Pallas segmentation kernel — is
+    bit-identical to the jnp packed engine: cuts, labels, and score."""
+    rng = np.random.default_rng(seed)
+    T, M, W = 3, 40, 2
+    w = int(rng.integers(1, 8))
+    masks = jnp.asarray(rng.integers(0, 2 ** 31, (T, M, W)).astype(np.uint32))
+    count = rng.integers(4, M + 1, T)
+    valid = jnp.asarray(np.arange(M)[None, :] < count[:, None])
+    a = tsa2(masks, valid, w, 0.3, 8)
+    b = tsa2(masks, valid, w, 0.3, 8, use_kernel=True)
+    for f in ("cut", "sub_local", "num_subs", "score"):
+        assert np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f))), (seed, w, f)
+
+
+@pytest.mark.parametrize("mode", ["materialize", "fused"])
+def test_tsa2_end_to_end_seg_kernel_parity(fig1, fig1_params, mode):
+    """run_dsc with seg_use_kernel=True: bit-identical TSA2 cut masks,
+    segmentations, and downstream cluster labels in both join modes."""
+    from repro.core.dsc import run_dsc
+    batch, _ = fig1
+    a = run_dsc(batch, fig1_params, mode=mode)
+    b = run_dsc(batch, fig1_params, mode=mode, seg_use_kernel=True)
+    for f in ("cut", "sub_local", "num_subs"):
+        assert np.array_equal(np.asarray(getattr(a.seg, f)),
+                              np.asarray(getattr(b.seg, f))), (mode, f)
+    for f in ("member_of", "is_rep", "is_outlier"):
+        assert np.array_equal(np.asarray(getattr(a.result, f)),
+                              np.asarray(getattr(b.result, f))), (mode, f)
 
 
 def _local_max_cuts_stacked(d, valid, w, tau, count):

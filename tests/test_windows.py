@@ -1,0 +1,89 @@
+"""Monoid sliding-window engine: naive-oracle equality for every op,
+offset-window shape, and the idempotent block-scan edge cases."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.windows import sliding_reduce, window_pair
+
+
+def _naive(sig: np.ndarray, lo: int, hi: int, op: str) -> np.ndarray:
+    """Per-position reduce over [n+lo, n+hi] ∩ [0, M) — the definition."""
+    M = sig.shape[1]
+    ident = {"sum": 0, "max": -np.inf, "or": 0}[op]
+    f = {"sum": np.add, "max": np.maximum, "or": np.bitwise_or}[op]
+    out = np.empty_like(sig)
+    for n in range(M):
+        acc = np.full(sig.shape[2:] or (), ident, sig.dtype)
+        for k in range(max(n + lo, 0), min(n + hi, M - 1) + 1):
+            acc = f(acc, sig[:, k])
+        out[:, n] = acc
+    return out
+
+
+WINDOWS = [(-3, -1), (0, 2), (1, 4), (-5, 3), (-1, -1), (2, 2),
+           (-2, 0), (-40, 40), (-40, -30), (30, 40)]
+
+
+@pytest.mark.parametrize("lo,hi", WINDOWS)
+def test_sum_and_max_match_naive(lo, hi):
+    rng = np.random.default_rng(abs(lo) * 100 + abs(hi))
+    d = rng.uniform(0, 1, (3, 17)).astype(np.float32)
+    for op in ("sum", "max"):
+        got = np.asarray(sliding_reduce(jnp.asarray(d), lo, hi, op))
+        want = _naive(d, lo, hi, op).astype(np.float32)
+        np.testing.assert_allclose(got, want, atol=1e-5, err_msg=op)
+
+
+@pytest.mark.parametrize("lo,hi", WINDOWS)
+def test_packed_or_matches_naive(lo, hi):
+    """The block OR-scan on uint32 words with trailing dims is exact."""
+    rng = np.random.default_rng(abs(lo) * 7 + abs(hi))
+    m = rng.integers(0, 2 ** 31, (3, 17, 2)).astype(np.uint32)
+    got = np.asarray(sliding_reduce(jnp.asarray(m), lo, hi, "or"))
+    assert (got == _naive(m, lo, hi, "or")).all()
+
+
+def test_empty_window_is_identity():
+    d = jnp.ones((2, 9), jnp.float32)
+    assert (np.asarray(sliding_reduce(d, 1, 0, "sum")) == 0).all()
+    assert (np.asarray(sliding_reduce(d, 1, 0, "max")) == -np.inf).all()
+    m = jnp.full((2, 9, 1), 7, jnp.uint32)
+    assert (np.asarray(sliding_reduce(m, 1, 0, "or")) == 0).all()
+
+
+def test_unknown_op_rejected():
+    with pytest.raises(ValueError):
+        sliding_reduce(jnp.ones((1, 4)), -1, 1, "mean")
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_random_windows_property(seed):
+    """Random (lo, hi, M) sweeps, including single-element and window-
+    larger-than-array shapes, for all three monoids."""
+    rng = np.random.default_rng(seed)
+    M = int(rng.integers(1, 33))
+    lo = int(rng.integers(-M - 2, M + 2))
+    hi = lo + int(rng.integers(0, M + 3))
+    d = rng.uniform(-1, 1, (2, M)).astype(np.float32)
+    for op in ("sum", "max"):
+        got = np.asarray(sliding_reduce(jnp.asarray(d), lo, hi, op))
+        np.testing.assert_allclose(got, _naive(d, lo, hi, op), atol=1e-5)
+    m = rng.integers(0, 2 ** 31, (2, M, 3)).astype(np.uint32)
+    got = np.asarray(sliding_reduce(jnp.asarray(m), lo, hi, "or"))
+    assert (got == _naive(m, lo, hi, "or")).all()
+
+
+def test_window_pair_is_w1_w2():
+    rng = np.random.default_rng(3)
+    d = jnp.asarray(rng.uniform(0, 1, (2, 21)).astype(np.float32))
+    w = 4
+    r1, r2 = window_pair(d, w, "sum")
+    np.testing.assert_allclose(np.asarray(r1),
+                               _naive(np.asarray(d), -w, -1, "sum"),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r2),
+                               _naive(np.asarray(d), 0, w - 1, "sum"),
+                               atol=1e-5)
