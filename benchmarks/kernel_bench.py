@@ -147,6 +147,107 @@ def _cluster_gate_instance(S: int = 256, seed: int = 0):
     return jnp.asarray(np.maximum(sim, sim.T).astype(np.float32)), table
 
 
+def _sim_gate_instance(S: int = 512, deg: int = 6, seed: int = 0):
+    """Deterministic contribution-level similarity instance for the CI
+    gate: ``N = S * deg`` raw SP-scatter contributions with bounded
+    per-row degree (so K=32 provably bounds every alpha-degree and the
+    certificate stays clean), plus the slot table.  Fixed S so the
+    structural memory comparison is made at the same shape in smoke and
+    full runs."""
+    from repro.core.types import SubtrajTable
+    rng = np.random.default_rng(seed)
+    src = np.repeat(np.arange(S), deg)
+    dst = rng.integers(0, S, S * deg)
+    w = rng.uniform(0.1, 1.0, S * deg).astype(np.float32)
+    table = SubtrajTable(
+        t_start=jnp.zeros(S), t_end=jnp.ones(S),
+        voting=jnp.asarray(rng.uniform(0, 5, S).astype(np.float32)),
+        card=jnp.ones(S, jnp.int32), valid=jnp.ones(S, bool),
+        traj_row=jnp.arange(S, dtype=jnp.int32))
+    return (jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32),
+            jnp.asarray(w), table)
+
+
+def bench_similarity_topk(iters: int = 3) -> dict:
+    """Dense [S, S] SP matrix vs panel-streamed top-K lists: wall-clock,
+    label identity, the certificate, and the structural memory proof.
+
+    Both paths consume the identical contribution list at the fixed
+    S=512 gate shape.  The deterministic gates are bit-identical labels
+    with ``overflow == 0``, the absence of any ``[S, S]``-element f32
+    buffer in the top-K HLO, and a >=8x peak-buffer reduction for the
+    similarity+clustering stages; wall-clock is recorded as trajectory
+    data only (CPU timing — the established stance of every gate here).
+    """
+    from repro.core.clustering import cluster_rounds, cluster_rounds_topk
+    from repro.core.similarity import (contribution_panel_raw, finalize_sim,
+                                       plan_panel, topk_overflow,
+                                       topk_stream)
+    from repro.core.types import DSCParams
+
+    src, dst, w, table = _sim_gate_instance()
+    S = table.num_slots
+    K, Sb = 32, plan_panel(S, 16)
+    params = DSCParams(alpha_sigma=0.0, k_sigma=0.0)
+
+    def dense_labels(src, dst, w):
+        raw = jnp.zeros((S + 1, S + 1), jnp.float32).at[src, dst].add(w)
+        sim = finalize_sim(raw[:S, :S], table)
+        return cluster_rounds(sim, table, params)
+
+    def topk_labels(src, dst, w):
+        topk = topk_stream(contribution_panel_raw(src, dst, w, S, Sb),
+                           table, k=K, panel=Sb)
+        res = cluster_rounds_topk(topk, table, params)
+        return res, topk_overflow(topk, res.alpha_used)
+
+    dense_fn = jax.jit(dense_labels)
+    topk_fn = jax.jit(topk_labels)
+    d_secs, res_d = time_fn(dense_fn, src, dst, w, iters=iters)
+    t_secs, (res_t, overflow) = time_fn(topk_fn, src, dst, w, iters=iters)
+
+    label_identical = all(
+        bool(np.array_equal(np.asarray(getattr(res_d, f)),
+                            np.asarray(getattr(res_t, f))))
+        for f in ("member_of", "member_sim", "is_rep", "is_outlier"))
+
+    hlo_dense = dense_fn.lower(src, dst, w).compile().as_text()
+    hlo_topk = topk_fn.lower(src, dst, w).compile().as_text()
+    # the dense fingerprint: any [S, S]- or [S+1, S+1]-element f32 buffer
+    fp_topk = (find_buffers_with_elements(hlo_topk, S * S, dtypes=("f32",))
+               + find_buffers_with_elements(hlo_topk, (S + 1) * (S + 1),
+                                            dtypes=("f32",)))
+    fp_dense = (find_buffers_with_elements(hlo_dense, S * S, dtypes=("f32",))
+                + find_buffers_with_elements(hlo_dense, (S + 1) * (S + 1),
+                                             dtypes=("f32",)))
+    peak_dense = peak_buffer_stats(hlo_dense)
+    peak_topk = peak_buffer_stats(hlo_topk)
+
+    rec = {
+        "shape": {"S": S, "K": K, "panel": Sb,
+                  "contributions": int(src.shape[0])},
+        "dense_us": d_secs * 1e6,
+        "topk_us": t_secs * 1e6,
+        "label_identical": bool(label_identical),
+        "overflow": int(overflow),
+        "dense_fingerprint_in_topk": len(fp_topk),
+        "dense_fingerprint_in_dense": len(fp_dense),
+        "peak_dense": peak_dense["largest"],
+        "peak_topk": peak_topk["largest"],
+        "peak_reduction_x": (peak_dense["largest_bytes"]
+                             / max(peak_topk["largest_bytes"], 1)),
+    }
+    csv_row("sim_dense", rec["dense_us"],
+            f"peak={peak_dense['largest_bytes']}B")
+    csv_row("sim_topk", rec["topk_us"],
+            f"peak={peak_topk['largest_bytes']}B;"
+            f"identical={label_identical};overflow={rec['overflow']}")
+    csv_row("sim_peak_reduction", rec["peak_reduction_x"],
+            f"dense={peak_dense['largest_bytes']}B;"
+            f"topk={peak_topk['largest_bytes']}B")
+    return rec
+
+
 def _seg_gate_instance(T: int = 32, M: int = 64, W: int = 8, seed: int = 0):
     """Deterministic fixed-shape TSA2 instance for the CI gate: W=8 packed
     words (C=256 candidates) so the structural memory comparison is made
@@ -353,6 +454,14 @@ def bench_pipeline(smoke: bool = False, out_dir: str = ".") -> dict:
         iters=2)
     e2e["seg_kernel_us"], out_sk = time_fn(
         lambda: run_dsc(batch, params, seg_use_kernel=True), iters=2)
+    # retry disabled: an overflow at the benchmarked K must fail the gate
+    # loudly, not silently auto-widen past it
+    e2e["topk_us"], out_t = time_fn(
+        lambda: run_dsc(batch, params, sim_mode="topk",
+                        sim_topk_retry=False), iters=2)
+    e2e["topk_fused_us"], out_tf = time_fn(
+        lambda: run_dsc(batch, params, mode="fused", sim_mode="topk",
+                        fused_tiles=ftiles, sim_topk_retry=False), iters=2)
     e2e = {k: v * 1e6 for k, v in e2e.items()}
 
     # segmentation gate: bit-plane vs packed TSA2 (fixed W=8 instance)
@@ -366,6 +475,18 @@ def bench_pipeline(smoke: bool = False, out_dir: str = ".") -> dict:
     segmentation["e2e_cut_identical"] = bool(
         np.array_equal(np.asarray(out_sk.seg.cut),
                        np.asarray(out_ref.seg.cut)))
+
+    # similarity gate: dense [S, S] vs panel-streamed top-K lists (fixed
+    # S=512 instance) plus e2e label identity of sim_mode="topk" on both
+    # execution modes at the pipeline shape
+    sim_rec = bench_similarity_topk(iters=2)
+    for key, out_x in (("e2e", out_t), ("e2e_fused", out_tf)):
+        sim_rec[key + "_label_identical"] = all(
+            bool(np.array_equal(np.asarray(getattr(out_x.result, f)),
+                                np.asarray(getattr(out_ref.result, f))))
+            for f in ("member_of", "member_sim", "is_rep", "is_outlier"))
+        sim_rec[key + "_overflow"] = int(out_x.sim_overflow)
+        sim_rec[key + "_dense_matrix_dropped"] = out_x.sim is None
 
     parity = {
         "member_of": bool((np.asarray(out_f.result.member_of)
@@ -445,6 +566,7 @@ def bench_pipeline(smoke: bool = False, out_dir: str = ".") -> dict:
         "memory": mem,
         "clustering": clustering,
         "segmentation": segmentation,
+        "similarity": sim_rec,
     }
     for mode, st in stages.items():
         for stage, us in st.items():
@@ -518,6 +640,26 @@ def bench_pipeline(smoke: bool = False, out_dir: str = ".") -> dict:
     assert sg["peak_reduction_x"] >= 8.0, (
         f"packed segmentation peak-buffer reduction "
         f"{sg['peak_reduction_x']:.1f}x is below the 8x target")
+    # Similarity gate.  Deterministic structural claims only: bit-identical
+    # labels with a clean spill certificate (gate instance + both e2e
+    # modes), no [S, S]-element f32 buffer anywhere in the top-K HLO, and
+    # a >=8x peak-buffer reduction for the similarity+clustering stages at
+    # the fixed S=512 gate shape.  Wall-clock recorded, never asserted
+    # (same stance as every other gate).
+    sr = sim_rec
+    assert sr["label_identical"] and sr["overflow"] == 0, sr
+    assert sr["e2e_label_identical"] and sr["e2e_overflow"] == 0, sr
+    assert sr["e2e_fused_label_identical"] and sr["e2e_fused_overflow"] == 0, sr
+    assert sr["e2e_dense_matrix_dropped"], sr
+    assert sr["e2e_fused_dense_matrix_dropped"], sr
+    assert sr["dense_fingerprint_in_topk"] == 0, (
+        f"[S, S]-element f32 buffers in the top-K HLO: "
+        f"{sr['dense_fingerprint_in_topk']}")
+    assert sr["dense_fingerprint_in_dense"] > 0, (
+        "sanity: the dense similarity HLO should hold the matrix")
+    assert sr["peak_reduction_x"] >= 8.0, (
+        f"top-K similarity peak-buffer reduction "
+        f"{sr['peak_reduction_x']:.1f}x is below the 8x target")
     return rec
 
 

@@ -34,26 +34,30 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import ClusteringResult, DSCParams, SubtrajTable
+from repro.core.similarity import sim_row_moments
+from repro.core.types import ClusteringResult, DSCParams, SubtrajTable, TopKSim
 from repro.kernels.cluster.ref import claim_max_ref
 
 
-def resolve_thresholds(params: DSCParams, sim: jnp.ndarray,
-                       table: SubtrajTable):
-    """Absolute (alpha, k) from sigma-relative settings (Sec. 6.1).
+def resolve_thresholds_from_moments(params: DSCParams, moments,
+                                    table: SubtrajTable):
+    """Absolute (alpha, k) from per-row similarity moments (Sec. 6.1).
 
-    The similarity statistics come from ONE masked pass over the ``[S, S]``
-    matrix: count, sum and sum-of-squares accumulate together and the
-    variance is ``E[x^2] - E[x]^2`` — numerically safe here because sim
-    values are O(1), so no catastrophic cancellation.  The voting vector
+    ``moments = (count [S] i32, sum [S] f32, sumsq [S] f32)`` are the
+    per-row statistics of the positive similarity entries
+    (``similarity.sim_row_moments``).  Keeping the row axis explicit —
+    rather than a pre-reduced scalar — is what lets every producer (the
+    dense matrix, the streamed row panels, and the distributed
+    column-block psum) hand over bit-identical inputs, so every path
+    resolves the exact same alpha.  The variance is ``E[x^2] - E[x]^2``:
+    numerically safe here because sim values are O(1).  The voting vector
     is only ``[S]``; it keeps the centered two-pass variance, which stays
     exact even when ``mean >> std`` (e.g. large absolute vote counts).
     """
-    pos = (sim > 0.0) & table.valid[:, None] & table.valid[None, :]
-    x = jnp.where(pos, sim, 0.0)
-    n_pos = jnp.maximum(jnp.sum(pos), 1)
-    s_mean = jnp.sum(x) / n_pos
-    s_var = jnp.maximum(jnp.sum(x * x) / n_pos - s_mean * s_mean, 0.0)
+    cnt, rsum, rsumsq = moments
+    n_pos = jnp.maximum(jnp.sum(cnt), 1)
+    s_mean = jnp.sum(rsum) / n_pos
+    s_var = jnp.maximum(jnp.sum(rsumsq) / n_pos - s_mean * s_mean, 0.0)
     alpha = jnp.where(params.alpha_abs >= 0.0, params.alpha_abs,
                       s_mean + params.alpha_sigma * jnp.sqrt(s_var))
 
@@ -64,6 +68,22 @@ def resolve_thresholds(params: DSCParams, sim: jnp.ndarray,
     k = jnp.where(params.k_abs >= 0.0, params.k_abs,
                   v_mean + params.k_sigma * jnp.sqrt(v_var))
     return alpha, k
+
+
+def resolve_thresholds(params: DSCParams, sim: jnp.ndarray,
+                       table: SubtrajTable, moments=None):
+    """Absolute (alpha, k) from a dense similarity matrix.
+
+    One masked row-wise pass collects (count, sum, sumsq) per row; the
+    reduction to alpha lives in ``resolve_thresholds_from_moments`` so the
+    top-K streaming path (which never holds the matrix) and the
+    distributed column-block path resolve bit-identical thresholds.
+    ``moments`` overrides the matrix pass with externally-accumulated
+    row moments (the distributed program psums per-rank blocks).
+    """
+    if moments is None:
+        moments = sim_row_moments(sim, table.valid, table.valid)
+    return resolve_thresholds_from_moments(params, moments, table)
 
 
 def visit_order(table: SubtrajTable):
@@ -80,12 +100,13 @@ def visit_order(table: SubtrajTable):
 
 
 def cluster_sequential(sim: jnp.ndarray, table: SubtrajTable,
-                       params: DSCParams) -> ClusteringResult:
+                       params: DSCParams,
+                       moments=None) -> ClusteringResult:
     """Algorithm 4 over a dense similarity matrix.  O(S) sequential steps,
     each a vectorized [S] claim/reassign update.  The parity oracle for
     ``cluster_rounds``."""
     S = table.num_slots
-    alpha, k = resolve_thresholds(params, sim, table)
+    alpha, k = resolve_thresholds(params, sim, table, moments=moments)
     order, _ = visit_order(table)
 
     member_of0 = jnp.full((S,), -1, jnp.int32)
@@ -159,7 +180,7 @@ def cluster_sequential(sim: jnp.ndarray, table: SubtrajTable,
 
 def cluster_rounds(sim: jnp.ndarray, table: SubtrajTable, params: DSCParams,
                    *, max_rounds: int | None = None, use_kernel: bool = False,
-                   with_rounds: bool = False):
+                   with_rounds: bool = False, moments=None):
     """Round-parallel Algorithm 4 — label-identical to the oracle.
 
     ``max_rounds=None`` runs a ``jax.lax.while_loop`` until every slot is
@@ -181,7 +202,7 @@ def cluster_rounds(sim: jnp.ndarray, table: SubtrajTable, params: DSCParams,
             "cannot guarantee convergence below S rounds (labels would "
             "silently be partial); pass max_rounds >= S or use the "
             "while_loop default")
-    alpha, k = resolve_thresholds(params, sim, table)
+    alpha, k = resolve_thresholds(params, sim, table, moments=moments)
     order, rank = visit_order(table)
     potential = table.valid & (table.voting >= k)
 
@@ -247,20 +268,207 @@ def cluster_rounds(sim: jnp.ndarray, table: SubtrajTable, params: DSCParams,
     return (result, rounds) if with_rounds else result
 
 
-def cluster(sim: jnp.ndarray, table: SubtrajTable, params: DSCParams,
-            engine: str = "rounds", *, max_rounds: int | None = None,
-            use_kernel: bool = False) -> ClusteringResult:
-    """Problem 3 entry point: dispatch on the clustering engine.
+# ---------------------------------------------------------------------------
+# Neighbor-list (top-K) engines — Algorithm 4 on the sparse SP relation
+# ---------------------------------------------------------------------------
+#
+# Every predicate of Algorithm 4 lives on *edges*: rep eligibility and the
+# claim-max only ever test ``sim > 0 and sim >= alpha`` pairs.  With the
+# max-symmetrized matrix reduced to per-row top-K lists (``TopKSim``), each
+# slot's alpha-adjacency is its own list — provided K bounded the row's
+# true alpha-degree, which the spill certificate proves per row
+# (``similarity.topk_overflow``).  Both engines below are then
+# label-identical to their dense counterparts, at O(S*K) per sweep instead
+# of O(S^2), and thresholds resolve from the streamed row moments the
+# ``TopKSim`` carries — bit-equal to the dense ``resolve_thresholds``.
 
-    ``engine="rounds"`` (default) is the round-parallel formulation;
-    ``engine="sequential"`` the O(S) oracle.  Both produce bit-identical
-    ``member_of`` / ``member_sim`` / ``is_rep`` / ``is_outlier``.
+
+def _topk_thresholds(topk: TopKSim, table: SubtrajTable, params: DSCParams):
+    return resolve_thresholds_from_moments(
+        params, (topk.degree, topk.row_sum, topk.row_sumsq), table)
+
+
+def cluster_sequential_topk(topk: TopKSim, table: SubtrajTable,
+                            params: DSCParams) -> ClusteringResult:
+    """Algorithm 4 over neighbor lists: the literal sequential transcription
+    with each visited slot's adjacency read from its ``[K]`` list row
+    instead of a dense ``[S]`` matrix row.  Parity oracle for
+    ``cluster_rounds_topk``."""
+    S = table.num_slots
+    alpha, k = _topk_thresholds(topk, table, params)
+    order, _ = visit_order(table)
+
+    member_of0 = jnp.full((S,), -1, jnp.int32)
+    member_sim0 = jnp.zeros((S,), jnp.float32)
+    is_rep0 = jnp.zeros((S,), bool)
+
+    def body(i, state):
+        member_of, member_sim, is_rep = state
+        s = order[i]
+        s_valid = table.valid[s]
+        unclaimed = member_of[s] < 0
+        becomes_rep = s_valid & unclaimed & ~is_rep[s] & (table.voting[s] >= k)
+
+        uid = jax.lax.dynamic_slice(topk.ids, (s, 0), (1, topk.k))[0]
+        w = jax.lax.dynamic_slice(topk.sims, (s, 0), (1, topk.k))[0]
+        safe = jnp.clip(uid, 0, S - 1)
+        claim = (becomes_rep
+                 & (uid >= 0)
+                 & table.valid[safe]
+                 & (w > 0.0)
+                 & (w >= alpha)
+                 & ~is_rep[safe]
+                 & (safe != s)
+                 & (w > member_sim[safe]))
+        tgt = jnp.where(claim, safe, S)          # sentinel S drops
+        member_of = member_of.at[tgt].set(s, mode="drop")
+        member_sim = member_sim.at[tgt].set(w, mode="drop")
+        member_of = member_of.at[s].set(
+            jnp.where(becomes_rep, s, member_of[s]))
+        member_sim = member_sim.at[s].set(
+            jnp.where(becomes_rep, jnp.float32(jnp.inf), member_sim[s]))
+        is_rep = is_rep.at[s].set(is_rep[s] | becomes_rep)
+        return member_of, member_sim, is_rep
+
+    member_of, member_sim, is_rep = jax.lax.fori_loop(
+        0, S, body, (member_of0, member_sim0, is_rep0))
+
+    is_outlier = table.valid & (member_of < 0)
+    return ClusteringResult(
+        member_of=member_of,
+        member_sim=jnp.where(is_rep, jnp.inf, member_sim),
+        is_rep=is_rep, is_outlier=is_outlier,
+        alpha_used=alpha, k_used=k)
+
+
+def cluster_rounds_topk(topk: TopKSim, table: SubtrajTable, params: DSCParams,
+                        *, max_rounds: int | None = None,
+                        use_kernel: bool = False, with_rounds: bool = False):
+    """Round-parallel Algorithm 4 over neighbor lists.
+
+    Same DAG recurrence and claim-max as ``cluster_rounds``, but every
+    per-round reduction runs over the ``[S, K]`` edge lists — O(S*K) work
+    and memory per round.  ``use_kernel=True`` routes the scan and the
+    claim-max through the Pallas list-tile kernels
+    (``repro.kernels.cluster``); label-identical either way.
     """
+    from repro.kernels.cluster.ref import (topk_claim_max_ref,
+                                           topk_round_scan_ref)
+    S = table.num_slots
+    if max_rounds is not None and max_rounds < S:
+        raise ValueError(
+            f"max_rounds={max_rounds} < S={S}: the fixed-trip fallback "
+            "cannot guarantee convergence below S rounds (labels would "
+            "silently be partial); pass max_rounds >= S or use the "
+            "while_loop default")
+    alpha, k = _topk_thresholds(topk, table, params)
+    order, rank = visit_order(table)
+    potential = table.valid & (table.voting >= k)
+
+    if use_kernel:
+        from repro.kernels import default_interpret
+        from repro.kernels.cluster.ops import (topk_cluster_assign,
+                                               topk_cluster_round_scan)
+        interp = default_interpret()
+
+        def scan(unresolved, is_rep):
+            return topk_cluster_round_scan(
+                topk.ids, topk.sims, rank, unresolved, is_rep, alpha,
+                interpret=interp)
+
+        def assign(is_rep):
+            return topk_cluster_assign(
+                topk.ids, topk.sims, rank, is_rep, table.valid, alpha,
+                interpret=interp)
+    else:
+        def scan(unresolved, is_rep):
+            return topk_round_scan_ref(topk.ids, topk.sims, rank,
+                                       unresolved, is_rep, alpha)
+
+        def assign(is_rep):
+            return topk_claim_max_ref(topk.ids, topk.sims, rank, is_rep,
+                                      table.valid, alpha)
+
+    def body(state):
+        resolved, is_rep, rounds = state
+        unresolved = ~resolved
+        blocked, claimed = scan(unresolved, is_rep)
+        frontier = unresolved & (~blocked | claimed)
+        is_rep = is_rep | (frontier & ~claimed)
+        resolved = resolved | frontier
+        return resolved, is_rep, rounds + jnp.any(unresolved).astype(jnp.int32)
+
+    init = (~potential, jnp.zeros_like(potential),
+            jnp.zeros((), jnp.int32))
+    if max_rounds is None:
+        resolved, is_rep, rounds = jax.lax.while_loop(
+            lambda st: ~jnp.all(st[0]), body, init)
+    else:
+        resolved, is_rep, rounds = jax.lax.fori_loop(
+            0, max_rounds, lambda i, st: body(st), init)
+
+    member_sim, member_of = assign(is_rep)
+
+    slots = jnp.arange(S, dtype=jnp.int32)
+    member_of = jnp.where(is_rep, slots, member_of)
+    member_sim = jnp.where(is_rep, jnp.float32(jnp.inf), member_sim)
+    is_outlier = table.valid & (member_of < 0)
+    result = ClusteringResult(
+        member_of=member_of, member_sim=member_sim,
+        is_rep=is_rep, is_outlier=is_outlier,
+        alpha_used=alpha, k_used=k)
+    return (result, rounds) if with_rounds else result
+
+
+def sscr_from_result(result: ClusteringResult) -> jnp.ndarray:
+    """Eq. 3 from the clustering result alone (no matrix gather).
+
+    ``member_sim`` of a claimed non-rep slot IS its similarity to its
+    representative (the claim-max value of the max-symmetrized matrix),
+    so the Eq. 3 sum needs no ``sim[s, rep]`` lookup — this is how the
+    top-K pipeline scores without ever holding ``[S, S]``.  Bit-equal to
+    ``sscr(result, sim)`` on the dense path.
+    """
+    member = (~result.is_rep) & (result.member_of >= 0)
+    return jnp.sum(jnp.where(member, result.member_sim, 0.0))
+
+
+def rmse_from_result(result: ClusteringResult, eps_sp: float) -> jnp.ndarray:
+    """Sec. 6.2 RMSE from the clustering result alone (cf. ``rmse``)."""
+    member = (~result.is_rep) & (result.member_of >= 0)
+    s = jnp.clip(jnp.where(member, result.member_sim, 0.0), 0.0, 1.0)
+    d = eps_sp * (1.0 - s)
+    n = jnp.maximum(jnp.sum(member), 1)
+    return jnp.sqrt(jnp.sum(jnp.where(member, d * d, 0.0)) / n)
+
+
+def cluster(sim, table: SubtrajTable, params: DSCParams,
+            engine: str = "rounds", *, max_rounds: int | None = None,
+            use_kernel: bool = False, moments=None) -> ClusteringResult:
+    """Problem 3 entry point: dispatch on representation and engine.
+
+    ``sim`` is either the dense ``[S, S]`` matrix or a ``TopKSim``
+    neighbor-list structure; ``engine="rounds"`` (default) is the
+    round-parallel formulation, ``engine="sequential"`` the O(S) oracle.
+    All four combinations produce bit-identical ``member_of`` /
+    ``member_sim`` / ``is_rep`` / ``is_outlier`` (for top-K: whenever the
+    overflow certificate is zero).  ``moments`` overrides the dense
+    threshold statistics (distributed column-block psum); the top-K
+    structure carries its own.
+    """
+    if isinstance(sim, TopKSim):
+        if engine == "sequential":
+            return cluster_sequential_topk(sim, table, params)
+        if engine == "rounds":
+            return cluster_rounds_topk(sim, table, params,
+                                       max_rounds=max_rounds,
+                                       use_kernel=use_kernel)
+        raise ValueError(f"unknown cluster engine {engine!r}")
     if engine == "sequential":
-        return cluster_sequential(sim, table, params)
+        return cluster_sequential(sim, table, params, moments=moments)
     if engine == "rounds":
         return cluster_rounds(sim, table, params, max_rounds=max_rounds,
-                              use_kernel=use_kernel)
+                              use_kernel=use_kernel, moments=moments)
     raise ValueError(f"unknown cluster engine {engine!r}")
 
 

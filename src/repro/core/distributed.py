@@ -43,9 +43,14 @@ from repro.core.clustering import cluster
 from repro.core.geometry import filter_delta_t
 from repro.core.partitioning import PartitionedBatch
 from repro.core.refine import refine_states
-from repro.core.similarity import build_subtraj_table_arrays, finalize_sim
+from repro.core.similarity import (build_subtraj_table_arrays, finalize_sim,
+                                   finalize_sim_cols, largest_divisor,
+                                   merge_topk_blocks, sim_row_moments,
+                                   topk_overflow)
 from repro.core.voting import normalized_voting
-from repro.core.types import ClusteringResult, DSCParams, JoinResult, SubtrajTable
+from repro.core.types import (ClusteringResult, DSCParams, JoinResult,
+                              SubtrajTable, TopKSim)
+from repro.core.windows import pack_bits
 from repro.utils.compat import shard_map as shard_map_compat
 from repro.utils.tree import pytree_dataclass
 
@@ -56,7 +61,8 @@ class DistributedDSCOutput:
     table: SubtrajTable           # [S] global, replicated
     vote: jnp.ndarray             # [P, T, Mp] partition layout
     active: jnp.ndarray           # [P, S] subtraj-in-partition masks
-    sim_diag: jnp.ndarray         # [P, 3] (mean sim>0, alpha, k) per partition
+    sim_diag: jnp.ndarray         # [P, 4] (mean sim>0, alpha, k, topk
+                                  # overflow count) per partition
 
 
 def _nbr(x, axis, shift, n):
@@ -65,22 +71,9 @@ def _nbr(x, axis, shift, n):
     return lax.ppermute(x, axis, perm)
 
 
-def _pick_block(n: int, target: int) -> int:
-    """Largest divisor of ``n`` that is <= ``target``."""
-    for b in range(min(n, target), 0, -1):
-        if n % b == 0:
-            return b
-    return 1
-
-
-def _pack_bits(b: jnp.ndarray) -> jnp.ndarray:
-    """[..., C] bool -> [..., ceil(C/32)] uint32."""
-    C = b.shape[-1]
-    W = -(-C // 32)
-    pad = jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, W * 32 - C)])
-    bits = pad.reshape(*b.shape[:-1], W, 32).astype(jnp.uint32)
-    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
-    return jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+# largest-divisor tile sizing shares one implementation with the panel
+# planner (repro.core.similarity.largest_divisor)
+_pick_block = largest_divisor
 
 
 def run_dsc_distributed(
@@ -96,15 +89,29 @@ def run_dsc_distributed(
     """Compile & run the full distributed pipeline on ``mesh``.
 
     Forwards ``use_index=True`` (see ``build_dsc_program``) to prune the
-    JOIN phase with the spatiotemporal index.
+    JOIN phase with the spatiotemporal index.  Under ``sim_mode="topk"``
+    the per-partition exactness certificate is checked on the host: a
+    nonzero overflow count raises (the fully-jitted program cannot widen
+    K in-graph the way ``run_dsc`` retries; rerun with a larger
+    ``sim_topk``).
     """
     fn = build_dsc_program(parts, params, mesh, part_axis=part_axis,
                            model_axis=model_axis, use_kernel=use_kernel,
                            **kw)
     final, table, vote, active, diag = jax.jit(fn)(
         parts.x, parts.y, parts.t, parts.valid, parts.traj_id, parts.ranges)
-    return DistributedDSCOutput(
+    out = DistributedDSCOutput(
         result=final, table=table, vote=vote, active=active, sim_diag=diag)
+    if kw.get("sim_mode", "dense") == "topk":
+        import numpy as np
+        overflow = int(np.asarray(diag)[:, 3].sum())
+        if overflow:
+            raise RuntimeError(
+                f"sim_topk={kw.get('sim_topk', 32)} truncated potential "
+                f"alpha-edges on {overflow} rows across partitions "
+                "(spill >= alpha): labels would not be exact.  Rerun "
+                "with a larger sim_topk.")
+    return out
 
 
 def run_dsc_distributed_lowerable(parts: PartitionedBatch,
@@ -131,6 +138,8 @@ def build_dsc_program(
     cluster_engine: str = "rounds",  # "rounds" | "sequential" (oracle)
     cluster_use_kernel: bool = False,  # Pallas tile kernels for phase 5
     seg_use_kernel: bool = False,    # Pallas TSA2 Jaccard kernel, phase 3
+    sim_mode: str = "dense",        # "dense" | "topk" SP representation
+    sim_topk: int = 32,             # K of the top-K neighbor lists
 ):
     """Build the shard_map program (not yet jitted) for ``parts`` shapes.
 
@@ -173,11 +182,30 @@ def build_dsc_program(
     the fused Pallas segmentation kernel (``repro.kernels.jaccard``)
     inside each shard instead of the jnp packed-word engine —
     bit-identical cuts and labels (DESIGN.md §7); a no-op under
-    ``tsa1``."""
+    ``tsa1``.
+
+    ``sim_mode="topk"`` keeps the SP relation sparse end to end
+    (DESIGN.md §8): each model rank builds only its ``[S, S_loc]``
+    candidate-column block of the raw scatter (``S_loc = S / m``), an
+    all_to_all hands every rank the transpose-partner rows of its block
+    (each byte of the matrix moves once, vs. the dense ``[S, S]``
+    psum's 2x-all-reduce), rank-exact max-symmetrization + Eq. 2
+    normalization happen on the block, and the only replicated payload
+    is the all_gather of per-rank top-(K+1) candidate lists —
+    ``[S, K+1]`` ids+sims instead of ``[S, S]``.  Phase 5 clusters on
+    the merged ``TopKSim`` neighbor lists; labels are bit-identical to
+    ``sim_mode="dense"`` whenever the spill certificate holds (the
+    per-partition overflow count rides in ``sim_diag[:, 3]``; widen
+    ``sim_topk`` when nonzero — there is no in-graph retry).  Threshold
+    moments psum per-rank row partials in both modes, so dense and topk
+    resolve bit-identical alpha.  ``sim_strategy`` / ``sim_dtype`` only
+    shape the dense collective and are ignored under topk."""
     if mode not in ("materialize", "fused"):
         raise ValueError(f"unknown mode {mode!r}")
     if cluster_engine not in ("rounds", "sequential"):
         raise ValueError(f"unknown cluster engine {cluster_engine!r}")
+    if sim_mode not in ("dense", "topk"):
+        raise ValueError(f"unknown sim_mode {sim_mode!r}")
     nP = mesh.shape[part_axis]
     nM = mesh.shape[model_axis]
     Pn, T, Mp = parts.x.shape
@@ -306,7 +334,7 @@ def build_dsc_program(
                 matched = join.best_w > 0.0                # [T, Mp, Tc]
                 allm = lax.all_gather(matched, model_axis)  # [nM, T, Mp, Tc]
                 allm = jnp.moveaxis(allm, 0, 2).reshape(T, Mp, nM * Tc)
-                masks = _pack_bits(allm)                   # [T, Mp, W]
+                masks = pack_bits(allm)                    # [T, Mp, W]
             else:
                 masks = jnp.zeros((T, Mp, 1), jnp.uint32)
 
@@ -377,6 +405,8 @@ def build_dsc_program(
 
         # ---------------- phase 4: similarity (SP relation) -------------
         gid_cand = sl(gid_cat)                             # [Tc, 3Mp]
+        S_loc = Tc * maxS
+        c0s = c0 * maxS
         if mode != "fused":
             idx = jnp.clip(join.best_idx, 0, 3 * Mp - 1)
             dst = jnp.where(
@@ -385,59 +415,112 @@ def build_dsc_program(
                 S)                                         # [T, Mp, Tc]
             src = jnp.broadcast_to(gid_own[:, :, None], (T, Mp, Tc))
 
-        if sim_strategy == "allgather":
-            S_loc = Tc * maxS
-            c0s = c0 * maxS
-            if mode == "fused":
-                # pass 2: re-sweep the halo slab, scatter refined weights
-                # into this rank's [S, S_loc] column block in-kernel
-                from repro.kernels.stjoin.ops import stjoin_sim_fused_arrays
-                gidc_l = jnp.where(gid_cand < S, gid_cand - c0s, S_loc)
-                raw = stjoin_sim_fused_arrays(
-                    px, py, pt, pv, traj_id, gid_own,
-                    sl(cx), sl(cy), sl(ct), sl(cv), cid, gidc_l,
-                    S, S_loc, params.eps_sp, params.eps_t, params.delta_t)
-            else:
-                dst_l = jnp.where(dst < S, dst - c0s, S_loc)
-                raw = jnp.zeros((S + 1, S_loc + 1), jnp.float32)
-                raw = raw.at[src.reshape(-1), dst_l.reshape(-1)].add(
-                    join.best_w.reshape(-1))
-                raw = raw[:S, :S_loc]
-            if sim_dtype == "bf16":
-                raw = raw.astype(jnp.bfloat16)
-            gathered = lax.all_gather(raw, model_axis)     # [nM, S, S_loc]
-            raw = jnp.moveaxis(gathered, 0, 1).reshape(S, S)
-            raw = raw.astype(jnp.float32)
-        else:
-            if mode == "fused":
-                from repro.kernels.stjoin.ops import stjoin_sim_fused_arrays
-                raw = stjoin_sim_fused_arrays(
-                    px, py, pt, pv, traj_id, gid_own,
-                    sl(cx), sl(cy), sl(ct), sl(cv), cid, gid_cand,
-                    S, S, params.eps_sp, params.eps_t, params.delta_t)
-            else:
-                raw = jnp.zeros((S + 1, S + 1), jnp.float32)
-                raw = raw.at[src.reshape(-1), dst.reshape(-1)].add(
-                    join.best_w.reshape(-1))
-                raw = raw[:S, :S]
-            if sim_dtype == "bf16":
-                raw = raw.astype(jnp.bfloat16)
-            raw = lax.psum(raw, model_axis).astype(jnp.float32)
-
-        # Eq. 2 normalization — shared with the single-host paths (the
-        # table.valid mask it adds is a no-op here: weight is only ever
-        # scattered into slots that own at least one valid point)
-        sim = finalize_sim(raw, table)
-
         # subtrajectories active in THIS partition
         active = jnp.zeros((S + 1,), bool).at[gid_own.reshape(-1)].set(
             True, mode="drop")[:S]
         part_table = table.replace(valid=table.valid & active)
-        sim = jnp.where(active[:, None] & active[None, :], sim, 0.0)
+        part_valid = part_table.valid
 
-        # ---------------- phase 5: per-partition clustering -------------
-        res_l = cluster(sim, part_table, params, engine=cluster_engine,
-                        use_kernel=cluster_use_kernel)
+        def rank_raw_block():
+            """This rank's [S, S_loc] candidate-column block of ``raw``."""
+            if mode == "fused":
+                # pass 2: re-sweep the halo slab, scatter refined weights
+                # into this rank's column block in-kernel
+                from repro.kernels.stjoin.ops import stjoin_sim_fused_arrays
+                gidc_l = jnp.where(gid_cand < S, gid_cand - c0s, S_loc)
+                return stjoin_sim_fused_arrays(
+                    px, py, pt, pv, traj_id, gid_own,
+                    sl(cx), sl(cy), sl(ct), sl(cv), cid, gidc_l,
+                    S, S_loc, params.eps_sp, params.eps_t, params.delta_t)
+            dst_l = jnp.where(dst < S, dst - c0s, S_loc)
+            raw = jnp.zeros((S + 1, S_loc + 1), jnp.float32)
+            raw = raw.at[src.reshape(-1), dst_l.reshape(-1)].add(
+                join.best_w.reshape(-1))
+            return raw[:S, :S_loc]
+
+        def moments_psum(sim_block):
+            """Threshold row moments from this rank's final column block,
+            psum'd — both SP representations feed bit-identical inputs,
+            so dense and topk resolve the exact same alpha."""
+            col_valid = lax.dynamic_slice_in_dim(part_valid, c0s, S_loc)
+            cnt, rsum, rsumsq = sim_row_moments(
+                sim_block, part_valid, col_valid)
+            return (lax.psum(cnt, model_axis), lax.psum(rsum, model_axis),
+                    lax.psum(rsumsq, model_axis))
+
+        if sim_mode == "topk":
+            K = min(sim_topk, S)
+            raw_blk = rank_raw_block()                     # [S, S_loc]
+            # transpose-partner exchange: rank r sends raw[cols_k, cols_r]
+            # to rank k and assembles raw[cols_r, :] — the rows that
+            # max-symmetrize its own columns.  Each matrix byte crosses
+            # the interconnect exactly once.
+            a = raw_blk.reshape(nM, S_loc, S_loc)
+            a = lax.all_to_all(a, model_axis, split_axis=0, concat_axis=1)
+            tpart = a.reshape(S_loc, S)                    # raw[cols_r, :]
+            sym_blk = jnp.maximum(raw_blk, tpart.T)
+            simb = finalize_sim_cols(sym_blk, c0s, table, active)
+            cnt, rsum, rsumsq = moments_psum(simb)
+            # per-rank top-(K+1) of the exact column block, then a k-way
+            # merge of the gathered [S, K+1] lists — the only replicated
+            # similarity payload
+            kk = min(K + 1, S_loc)
+            vals, idx_l = jax.lax.top_k(simb, kk)
+            lids = c0s + idx_l
+            g_vals = lax.all_gather(vals, model_axis)      # [nM, S, kk]
+            g_ids = lax.all_gather(lids, model_axis)
+            m_vals = jnp.moveaxis(g_vals, 0, 1).reshape(S, nM * kk)
+            m_ids = jnp.moveaxis(g_ids, 0, 1).reshape(S, nM * kk)
+            ids, sims, spill = merge_topk_blocks(m_ids, m_vals, K)
+            topk = TopKSim(ids=ids, sims=sims, spill=spill, degree=cnt,
+                           row_sum=rsum, row_sumsq=rsumsq)
+
+            # ---------- phase 5: per-partition clustering (lists) -------
+            res_l = cluster(topk, part_table, params, engine=cluster_engine,
+                            use_kernel=cluster_use_kernel)
+            overflow = topk_overflow(topk, res_l.alpha_used)
+            meansim = jnp.sum(rsum) / jnp.maximum(jnp.sum(cnt), 1)
+        else:
+            if sim_strategy == "allgather":
+                raw = rank_raw_block()
+                if sim_dtype == "bf16":
+                    raw = raw.astype(jnp.bfloat16)
+                gathered = lax.all_gather(raw, model_axis)  # [nM, S, S_loc]
+                raw = jnp.moveaxis(gathered, 0, 1).reshape(S, S)
+                raw = raw.astype(jnp.float32)
+            else:
+                if mode == "fused":
+                    from repro.kernels.stjoin.ops import \
+                        stjoin_sim_fused_arrays
+                    raw = stjoin_sim_fused_arrays(
+                        px, py, pt, pv, traj_id, gid_own,
+                        sl(cx), sl(cy), sl(ct), sl(cv), cid, gid_cand,
+                        S, S, params.eps_sp, params.eps_t, params.delta_t)
+                else:
+                    raw = jnp.zeros((S + 1, S + 1), jnp.float32)
+                    raw = raw.at[src.reshape(-1), dst.reshape(-1)].add(
+                        join.best_w.reshape(-1))
+                    raw = raw[:S, :S]
+                if sim_dtype == "bf16":
+                    raw = raw.astype(jnp.bfloat16)
+                raw = lax.psum(raw, model_axis).astype(jnp.float32)
+
+            # Eq. 2 normalization — shared with the single-host paths (the
+            # table.valid mask it adds is a no-op here: weight is only ever
+            # scattered into slots that own at least one valid point)
+            sim = finalize_sim(raw, table)
+            sim = jnp.where(active[:, None] & active[None, :], sim, 0.0)
+            moments = moments_psum(
+                lax.dynamic_slice_in_dim(sim, c0s, S_loc, axis=1))
+
+            # ------------- phase 5: per-partition clustering ------------
+            res_l = cluster(sim, part_table, params, engine=cluster_engine,
+                            use_kernel=cluster_use_kernel, moments=moments)
+            overflow = jnp.zeros((), jnp.int32)
+            pos = sim > 0
+            meansim = jnp.sum(jnp.where(pos, sim, 0.0)) / jnp.maximum(
+                jnp.sum(pos), 1)
+
         alpha, k = res_l.alpha_used, res_l.k_used
 
         # ---------------- phase 6: cross-partition refinement -----------
@@ -449,10 +532,8 @@ def build_dsc_program(
             g_member, g_sim, g_rep, g_active,
             lax.pmean(alpha, part_axis), lax.pmean(k, part_axis))
 
-        pos = sim > 0
-        meansim = jnp.sum(jnp.where(pos, sim, 0.0)) / jnp.maximum(
-            jnp.sum(pos), 1)
-        diag = jnp.stack([meansim, alpha, k])
+        diag = jnp.stack([meansim, alpha, k,
+                          overflow.astype(jnp.float32)])
         return final, table, vote[None], active[None], diag[None]
 
     part_spec = P(part_axis, None, None)

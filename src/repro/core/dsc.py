@@ -30,9 +30,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import geometry, segmentation, similarity, voting
-from repro.core.clustering import cluster, rmse, sscr
+from repro.core.clustering import (cluster, rmse, rmse_from_result, sscr,
+                                   sscr_from_result)
 from repro.core.types import (ClusteringResult, DSCParams, JoinResult,
-                              SubtrajSegmentation, SubtrajTable,
+                              SubtrajSegmentation, SubtrajTable, TopKSim,
                               TrajectoryBatch)
 from repro.utils.tree import pytree_dataclass
 
@@ -43,7 +44,9 @@ class DSCOutput:
     vote: jnp.ndarray               # [T, M] point voting
     seg: SubtrajSegmentation
     table: SubtrajTable
-    sim: jnp.ndarray                # [S, S]
+    sim: jnp.ndarray | None         # [S, S]; None in sim_mode="topk"
+    sim_topk: TopKSim | None        # [S, K] lists in sim_mode="topk"
+    sim_overflow: jnp.ndarray | None  # [] i32 certificate violations (topk)
     result: ClusteringResult
     sscr: jnp.ndarray               # Eq. 3 objective
     rmse: jnp.ndarray               # Sec. 6.2 quality metric
@@ -51,7 +54,9 @@ class DSCOutput:
 
 def _finish(batch, params, join, vote, masks, tile_ids=None,
             fused_tiles=None, cluster_engine="rounds",
-            cluster_use_kernel=False, seg_use_kernel=False) -> DSCOutput:
+            cluster_use_kernel=False, seg_use_kernel=False,
+            sim_mode="dense", sim_topk=32,
+            sim_panel=None) -> DSCOutput:
     """Segmentation onward — shared by every join/vote front-end."""
     nvote = voting.normalized_voting(vote, batch.valid)
     if params.segmentation == "tsa1":
@@ -64,6 +69,34 @@ def _finish(batch, params, join, vote, masks, tile_ids=None,
 
     table = similarity.build_subtraj_table(
         batch, seg, vote, params.max_subtrajs_per_traj)
+
+    if sim_mode == "topk":
+        # sparse SP relation: panel-streamed top-K lists, never [S, S]
+        if join is None:
+            from repro.kernels.stjoin import ops as stjoin_ops
+            Sb = similarity.plan_panel(table.num_slots, sim_panel)
+
+            def panel_raw(p0):
+                return stjoin_ops.stjoin_sim_panel_fused(
+                    batch, batch, seg.sub_local, seg.sub_local,
+                    params.max_subtrajs_per_traj, params.eps_sp,
+                    params.eps_t, params.delta_t, p0=p0, panel=Sb,
+                    tile_ids=tile_ids, **_tile_kwargs(fused_tiles))
+
+            topk = similarity.topk_stream(panel_raw, table, k=sim_topk,
+                                          panel=Sb)
+        else:
+            topk = similarity.similarity_topk(
+                join, seg, seg.sub_local, table,
+                params.max_subtrajs_per_traj, k=sim_topk, panel=sim_panel)
+        result = cluster(topk, table, params, engine=cluster_engine,
+                         use_kernel=cluster_use_kernel)
+        overflow = similarity.topk_overflow(topk, result.alpha_used)
+        return DSCOutput(join=join, vote=vote, seg=seg, table=table,
+                         sim=None, sim_topk=topk, sim_overflow=overflow,
+                         result=result, sscr=sscr_from_result(result),
+                         rmse=rmse_from_result(result, params.eps_sp))
+
     if join is None:
         from repro.kernels.stjoin import ops as stjoin_ops
         raw = stjoin_ops.stjoin_sim_fused(
@@ -79,6 +112,7 @@ def _finish(batch, params, join, vote, masks, tile_ids=None,
     result = cluster(sim, table, params, engine=cluster_engine,
                      use_kernel=cluster_use_kernel)
     return DSCOutput(join=join, vote=vote, seg=seg, table=table, sim=sim,
+                     sim_topk=None, sim_overflow=None,
                      result=result, sscr=sscr(result, sim),
                      rmse=rmse(result, sim, params.eps_sp))
 
@@ -86,12 +120,15 @@ def _finish(batch, params, join, vote, masks, tile_ids=None,
 @functools.partial(jax.jit, static_argnames=("use_kernel", "use_index",
                                              "cluster_engine",
                                              "cluster_use_kernel",
-                                             "seg_use_kernel"))
+                                             "seg_use_kernel", "sim_mode",
+                                             "sim_topk", "sim_panel"))
 def _run_dsc_materialize(batch: TrajectoryBatch, params: DSCParams,
                          use_kernel: bool, use_index: bool,
                          cluster_engine: str,
                          cluster_use_kernel: bool,
-                         seg_use_kernel: bool) -> DSCOutput:
+                         seg_use_kernel: bool,
+                         sim_mode: str = "dense", sim_topk: int = 32,
+                         sim_panel: int | None = None) -> DSCOutput:
     if use_kernel:
         from repro.kernels.stjoin import ops as stjoin_ops
         join = stjoin_ops.subtrajectory_join(
@@ -106,16 +143,20 @@ def _run_dsc_materialize(batch: TrajectoryBatch, params: DSCParams,
     return _finish(batch, params, join, vote, masks,
                    cluster_engine=cluster_engine,
                    cluster_use_kernel=cluster_use_kernel,
-                   seg_use_kernel=seg_use_kernel)
+                   seg_use_kernel=seg_use_kernel, sim_mode=sim_mode,
+                   sim_topk=sim_topk, sim_panel=sim_panel)
 
 
 @functools.partial(jax.jit, static_argnames=("cluster_engine",
                                              "cluster_use_kernel",
-                                             "seg_use_kernel"))
+                                             "seg_use_kernel", "sim_mode",
+                                             "sim_topk", "sim_panel"))
 def _run_dsc_from_join(batch: TrajectoryBatch, params: DSCParams,
                        join: JoinResult, cluster_engine: str = "rounds",
                        cluster_use_kernel: bool = False,
-                       seg_use_kernel: bool = False) -> DSCOutput:
+                       seg_use_kernel: bool = False,
+                       sim_mode: str = "dense", sim_topk: int = 32,
+                       sim_panel: int | None = None) -> DSCOutput:
     """Materializing tail for a join produced outside the jit boundary
     (the host-planned index-pruned Pallas join)."""
     vote = voting.point_voting(join)
@@ -124,7 +165,8 @@ def _run_dsc_from_join(batch: TrajectoryBatch, params: DSCParams,
     return _finish(batch, params, join, vote, masks,
                    cluster_engine=cluster_engine,
                    cluster_use_kernel=cluster_use_kernel,
-                   seg_use_kernel=seg_use_kernel)
+                   seg_use_kernel=seg_use_kernel, sim_mode=sim_mode,
+                   sim_topk=sim_topk, sim_panel=sim_panel)
 
 
 def _tile_kwargs(fused_tiles):
@@ -138,12 +180,15 @@ def _tile_kwargs(fused_tiles):
 @functools.partial(jax.jit, static_argnames=("fused_tiles",
                                              "cluster_engine",
                                              "cluster_use_kernel",
-                                             "seg_use_kernel"))
+                                             "seg_use_kernel", "sim_mode",
+                                             "sim_topk", "sim_panel"))
 def _run_dsc_fused(batch: TrajectoryBatch, params: DSCParams,
                    tile_ids=None, fused_tiles=None,
                    cluster_engine: str = "rounds",
                    cluster_use_kernel: bool = False,
-                   seg_use_kernel: bool = False) -> DSCOutput:
+                   seg_use_kernel: bool = False,
+                   sim_mode: str = "dense", sim_topk: int = 32,
+                   sim_panel: int | None = None) -> DSCOutput:
     from repro.kernels.stjoin import ops as stjoin_ops
     vote, masks = stjoin_ops.stjoin_vote_fused_arrays(
         batch.x, batch.y, batch.t, batch.valid, batch.traj_id,
@@ -154,7 +199,8 @@ def _run_dsc_fused(batch: TrajectoryBatch, params: DSCParams,
     return _finish(batch, params, None, vote, masks, tile_ids=tile_ids,
                    fused_tiles=fused_tiles, cluster_engine=cluster_engine,
                    cluster_use_kernel=cluster_use_kernel,
-                   seg_use_kernel=seg_use_kernel)
+                   seg_use_kernel=seg_use_kernel, sim_mode=sim_mode,
+                   sim_topk=sim_topk, sim_panel=sim_panel)
 
 
 def run_dsc(batch: TrajectoryBatch, params: DSCParams,
@@ -163,7 +209,11 @@ def run_dsc(batch: TrajectoryBatch, params: DSCParams,
             fused_tiles: tuple[int, int, int] | None = None,
             cluster_engine: str = "rounds",
             cluster_use_kernel: bool = False,
-            seg_use_kernel: bool = False) -> DSCOutput:
+            seg_use_kernel: bool = False,
+            sim_mode: str = "dense",
+            sim_topk: int | None = None,
+            sim_panel: int | None = None,
+            sim_topk_retry: bool = True) -> DSCOutput:
     """Run the full DSC pipeline on one host / one partition.
 
     ``mode="fused"`` streams the join (no ``[T, M, C]`` cube;
@@ -184,40 +234,78 @@ def run_dsc(batch: TrajectoryBatch, params: DSCParams,
     fused Pallas segmentation kernel (``repro.kernels.jaccard``) instead
     of the jnp packed-word engine — bit-identical cuts, segmentations,
     and downstream labels (DESIGN.md §7); a no-op under ``tsa1``.
+
+    ``sim_mode="topk"`` replaces the dense ``[S, S]`` SP matrix with the
+    panel-streamed ``[S, K]`` neighbor-list representation (DESIGN.md §8):
+    similarity memory drops to O(S*K + Sb*S) and clustering consumes the
+    edge lists directly.  Labels are bit-identical to the dense path
+    whenever the per-row spill certificate holds (``out.sim_overflow ==
+    0``); on violation the run auto-retries with K doubled
+    (``sim_topk_retry``, host-level — requires concrete inputs) or raises.
+    ``sim_topk`` sets K (default 32, clamped to S); ``sim_panel`` bounds
+    the streaming panel height Sb (default 128, snapped to a divisor of
+    S).  ``out.sim`` is None in this mode (use ``out.sim_topk``).
     """
     if mode not in ("materialize", "fused"):
         raise ValueError(f"unknown mode {mode!r}")
     if cluster_engine not in ("rounds", "sequential"):
         raise ValueError(f"unknown cluster engine {cluster_engine!r}")
-    if mode == "fused":
-        tile_ids = None
-        if use_index:
-            from repro.kernels.stjoin import ops as stjoin_ops
-            plan = stjoin_ops.plan_fused_tiles(
-                batch.x, batch.y, batch.t, batch.valid,
-                batch.x, batch.y, batch.t, batch.valid,
-                params.eps_sp, params.eps_t, **_tile_kwargs(fused_tiles))
-            # bind the plan's resolved geometry so both passes sweep the
-            # exact tiling the ids were built for
-            tile_ids = plan.tile_ids
-            fused_tiles = (plan.rows, plan.bc, plan.bm)
-        return _run_dsc_fused(batch, params, tile_ids, fused_tiles,
-                              cluster_engine=cluster_engine,
-                              cluster_use_kernel=cluster_use_kernel,
-                              seg_use_kernel=seg_use_kernel)
-    if use_index and use_kernel:
-        # grid-pruned Pallas join: host-side planning pass, then jitted tail
-        from repro.kernels.stjoin import ops as stjoin_ops
-        join = stjoin_ops.subtrajectory_join(
-            batch, batch, params.eps_sp, params.eps_t, params.delta_t,
-            use_index=True)
-        return _run_dsc_from_join(batch, params, join,
+    if sim_mode not in ("dense", "topk"):
+        raise ValueError(f"unknown sim_mode {sim_mode!r}")
+
+    S = batch.num_trajs * params.max_subtrajs_per_traj
+    k = min(sim_topk if sim_topk is not None else 32, S)
+
+    def dispatch(k):
+        sim_kw = dict(sim_mode=sim_mode, sim_topk=k, sim_panel=sim_panel)
+        if mode == "fused":
+            tile_ids = None
+            tiles = fused_tiles
+            if use_index:
+                from repro.kernels.stjoin import ops as stjoin_ops
+                plan = stjoin_ops.plan_fused_tiles(
+                    batch.x, batch.y, batch.t, batch.valid,
+                    batch.x, batch.y, batch.t, batch.valid,
+                    params.eps_sp, params.eps_t, **_tile_kwargs(tiles))
+                # bind the plan's resolved geometry so both passes sweep
+                # the exact tiling the ids were built for
+                tile_ids = plan.tile_ids
+                tiles = (plan.rows, plan.bc, plan.bm)
+            return _run_dsc_fused(batch, params, tile_ids, tiles,
                                   cluster_engine=cluster_engine,
                                   cluster_use_kernel=cluster_use_kernel,
-                                  seg_use_kernel=seg_use_kernel)
-    return _run_dsc_materialize(batch, params, use_kernel, use_index,
-                                cluster_engine, cluster_use_kernel,
-                                seg_use_kernel)
+                                  seg_use_kernel=seg_use_kernel, **sim_kw)
+        if use_index and use_kernel:
+            # grid-pruned Pallas join: host-side planning pass, then
+            # jitted tail
+            from repro.kernels.stjoin import ops as stjoin_ops
+            join = stjoin_ops.subtrajectory_join(
+                batch, batch, params.eps_sp, params.eps_t, params.delta_t,
+                use_index=True)
+            return _run_dsc_from_join(batch, params, join,
+                                      cluster_engine=cluster_engine,
+                                      cluster_use_kernel=cluster_use_kernel,
+                                      seg_use_kernel=seg_use_kernel,
+                                      **sim_kw)
+        return _run_dsc_materialize(batch, params, use_kernel, use_index,
+                                    cluster_engine, cluster_use_kernel,
+                                    seg_use_kernel, **sim_kw)
+
+    if sim_mode == "dense":
+        return dispatch(k)
+    while True:
+        out = dispatch(k)
+        overflow = int(out.sim_overflow)
+        if overflow == 0:
+            return out
+        if k >= S:                  # unreachable: K == S cannot spill
+            raise AssertionError("overflow with K == S")
+        if not sim_topk_retry:
+            raise RuntimeError(
+                f"sim_topk={k} truncated a potential alpha-edge on "
+                f"{overflow} rows (spill >= alpha): labels would not be "
+                "exact.  Raise sim_topk or enable sim_topk_retry.")
+        k = min(2 * k, S)
 
 
 def cluster_summary(out: DSCOutput) -> dict:

@@ -37,7 +37,10 @@ def refine_states(member_of: jnp.ndarray, member_sim: jnp.ndarray,
     best_p = jnp.argmax(sim_masked, axis=0)                       # [S]
     best_sim = jnp.take_along_axis(sim_masked, best_p[None, :], axis=0)[0]
     best_of = jnp.take_along_axis(member_of, best_p[None, :], axis=0)[0]
-    has_member = jnp.isfinite(best_sim) & (best_sim > -jnp.inf)
+    # the masked stack holds finite sims for real members and -inf
+    # elsewhere (rep rows' +inf is masked out by ~is_rep), so finiteness
+    # alone decides membership
+    has_member = jnp.isfinite(best_sim)
 
     slot = jnp.arange(S, dtype=jnp.int32)
     member_of_out = jnp.where(

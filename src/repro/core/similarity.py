@@ -8,13 +8,31 @@ relation.  The normalizer is ``min(|r'|, |s'|)`` (Eq. 2's denominator).
 The matrix is symmetrized with ``max`` (DESIGN.md §2.4): the paper's LCSS
 similarity is symmetric by definition; the dense best-match estimate can differ
 slightly between the two viewpoints.
+
+Two representations (DESIGN.md §8)
+----------------------------------
+* dense ``[S, S]``      — ``similarity_matrix`` / ``finalize_sim``: the
+  parity oracle, quadratic in S.
+* top-K neighbor lists  — the panel-streamed engine below
+  (``similarity_topk`` / ``topk_stream``): the matrix is swept in row
+  panels of ``Sb`` slots; each join contribution is scattered into the
+  live panel in *both* orientations (forward ``[src - p0, dst]`` and
+  reverse ``[dst - p0, src]``), so the panel's rows see every cell of
+  ``raw`` AND of ``raw.T`` and the ``max``-symmetrization stays exact
+  per panel.  A finished panel is normalized (Eq. 2's symmetric
+  ``min(card)`` denominator commutes with the row-wise max, so
+  normalize-after-max is bit-identical to ``finalize_sim``'s
+  normalize-before-max), reduced to ``[Sb, K]`` (id, sim) lists plus the
+  per-row moments ``resolve_thresholds`` needs, and discarded — peak
+  similarity memory is O(S*K + Sb*S), never O(S^2).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.types import (JoinResult, SubtrajSegmentation, SubtrajTable,
-                              TrajectoryBatch)
+                              TopKSim, TrajectoryBatch)
 
 
 def build_subtraj_table(batch: TrajectoryBatch, seg: SubtrajSegmentation,
@@ -70,6 +88,31 @@ def finalize_sim(raw: jnp.ndarray, table: SubtrajTable) -> jnp.ndarray:
     return jnp.where(keep, sim, 0.0)            # one fused mask pass
 
 
+def scatter_operands(join: JoinResult, ref_seg: SubtrajSegmentation,
+                     cand_seg_sub_local: jnp.ndarray, S: int, max_subs: int):
+    """Flat SP-scatter contribution list ``(src [N], dst [N], w [N])``.
+
+    ``src``/``dst`` are subtrajectory slot ids with ``S`` as the sentinel
+    for unmatched / unsegmented points.  Shared by the dense scatter
+    (``similarity_matrix``) and the panel-streamed top-K sweep
+    (``similarity_topk``) so both accumulate the identical contribution
+    sequence — per-cell sums are bit-equal.
+    """
+    T, M, C = join.best_w.shape
+    src = jnp.where(
+        ref_seg.sub_local >= 0,
+        jnp.arange(T)[:, None] * max_subs + ref_seg.sub_local, S)  # [T, M]
+    src = jnp.broadcast_to(src[:, :, None], (T, M, C))
+
+    idx = jnp.clip(join.best_idx, 0, cand_seg_sub_local.shape[1] - 1)
+    cand_sub = cand_seg_sub_local[
+        jnp.arange(C)[None, None, :], idx]                          # [T, M, C]
+    dst = jnp.where(
+        (join.best_idx >= 0) & (cand_sub >= 0),
+        jnp.arange(C)[None, None, :] * max_subs + cand_sub, S)
+    return src.reshape(-1), dst.reshape(-1), join.best_w.reshape(-1)
+
+
 def similarity_matrix(
     join: JoinResult,
     ref_seg: SubtrajSegmentation,
@@ -82,21 +125,261 @@ def similarity_matrix(
     ``cand_seg_sub_local`` maps each candidate point to its local subtraj id
     (in a self-join this is the same array as ``ref_seg.sub_local``).
     """
-    T, M, C = join.best_w.shape
     S = table.num_slots
-
-    src = jnp.where(
-        ref_seg.sub_local >= 0,
-        jnp.arange(T)[:, None] * max_subs + ref_seg.sub_local, S)  # [T, M]
-    src = jnp.broadcast_to(src[:, :, None], (T, M, C))
-
-    idx = jnp.clip(join.best_idx, 0, cand_seg_sub_local.shape[1] - 1)
-    cand_sub = cand_seg_sub_local[
-        jnp.arange(C)[None, None, :], idx]                          # [T, M, C]
-    dst = jnp.where(
-        (join.best_idx >= 0) & (cand_sub >= 0),
-        jnp.arange(C)[None, None, :] * max_subs + cand_sub, S)
-
+    src, dst, w = scatter_operands(join, ref_seg, cand_seg_sub_local, S,
+                                   max_subs)
     raw = jnp.zeros((S + 1, S + 1), jnp.float32)
-    raw = raw.at[src.reshape(-1), dst.reshape(-1)].add(join.best_w.reshape(-1))
+    raw = raw.at[src, dst].add(w)
     return finalize_sim(raw[:S, :S], table)
+
+
+# ---------------------------------------------------------------------------
+# Panel-streamed top-K engine (DESIGN.md §8): the sparse SP representation.
+# ---------------------------------------------------------------------------
+
+
+def largest_divisor(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target`` — the one tile /
+    panel sizing rule (also the distributed join's block planner)."""
+    for b in range(min(n, max(target, 1)), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def plan_panel(S: int, target: int | None = None) -> int:
+    """Panel height ``Sb``: the largest divisor of ``S`` at most ``target``.
+
+    A divisor keeps every panel full — no partially-valid panel rows, so
+    the per-panel reductions need no row masking beyond ``table.valid``.
+    """
+    return largest_divisor(S, target if target is not None else 128)
+
+
+def _row_tree_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Sum over axis 1 with an explicit pairwise tree (zero-padded to a
+    power of two).  The association order depends only on the row LENGTH
+    — never on how many rows ride along — unlike ``jnp.sum(axis=1)``,
+    whose XLA lowering may reassociate differently for ``[S, S]`` vs
+    ``[Sb, S]`` operands and shift the result by ulps."""
+    n = x.shape[1]
+    p = 1 << max(n - 1, 0).bit_length()
+    x = jnp.pad(x, ((0, 0), (0, p - n)))
+    while x.shape[1] > 1:
+        x = x[:, 0::2] + x[:, 1::2]
+    return x[:, 0]
+
+
+def sim_row_moments(sim_rows: jnp.ndarray, row_valid: jnp.ndarray,
+                    col_valid: jnp.ndarray):
+    """Per-row (count, sum, sum-of-squares) of the positive similarity
+    entries: the sufficient statistics of ``resolve_thresholds``'s alpha.
+
+    Reduction is strictly row-wise with a fixed pairwise tree, so
+    computing it on the full ``[S, S]`` matrix or on an ``[Sb, S]`` row
+    panel yields bit-identical per-row partials wherever the row content
+    matches — the property that keeps the dense and top-K paths'
+    thresholds bit-equal.  (Distributed column blocks reduce over
+    ``S_loc`` and psum — a different but mode-independent order, so the
+    two distributed representations still agree bit for bit.)
+    """
+    pos = (sim_rows > 0.0) & row_valid[:, None] & col_valid[None, :]
+    x = jnp.where(pos, sim_rows, 0.0)
+    return (_row_tree_sum(pos.astype(jnp.int32)),
+            _row_tree_sum(x), _row_tree_sum(x * x))
+
+
+def finalize_sim_panel(fwd: jnp.ndarray, rev: jnp.ndarray, p0,
+                       table: SubtrajTable,
+                       active: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Eq. 2 finalization of one row panel from its two raw orientations.
+
+    ``fwd[i, j] = raw[p0 + i, j]`` and ``rev[i, j] = raw[j, p0 + i]``, so
+    ``max(fwd, rev)`` is exactly the panel's rows of ``max(raw, raw.T)``.
+    The symmetric ``min(card)`` denominator commutes with the max (IEEE
+    division by a positive denominator is monotone), so dividing after
+    the max is bit-identical to ``finalize_sim``'s divide-then-max.
+    ``active`` (distributed phase 4) additionally masks rows/columns to
+    the partition-active slot set.
+    """
+    Sb, S = fwd.shape
+    rows = p0 + jnp.arange(Sb)
+    cols = jnp.arange(S)
+    sym = jnp.maximum(fwd, rev)
+    denom = jnp.minimum(table.card[rows][:, None], table.card[None, :])
+    sim = sym / jnp.maximum(denom, 1).astype(jnp.float32)
+    keep = (table.valid[rows][:, None] & table.valid[None, :]
+            & (rows[:, None] != cols[None, :]))
+    if active is not None:
+        keep &= active[rows][:, None] & active[None, :]
+    return jnp.where(keep, sim, 0.0)
+
+
+def _topk_tail(vals: jnp.ndarray, cand_ids: jnp.ndarray, k: int):
+    """Shared tail of every top-K reduction: truncate ``lax.top_k``'s
+    top-(K+1) ``(vals, candidate ids)`` to the K retained edges (id -1 /
+    sim 0 where non-positive) and the spill certificate — the (K+1)-th
+    value, clamped non-negative, 0 when it does not exist.  One
+    implementation, so the single-host panel reduction and the
+    distributed k-way merge can never disagree on the certificate's
+    semantics.
+    """
+    kk = vals.shape[1]
+    sims = vals[:, :k]
+    ids = jnp.where(sims > 0.0, cand_ids[:, :k], -1).astype(jnp.int32)
+    sims = jnp.maximum(sims, 0.0)
+    if kk > k:
+        spill = jnp.maximum(vals[:, k], 0.0)
+    else:
+        spill = jnp.zeros((vals.shape[0],), jnp.float32)
+    return ids, sims, spill
+
+
+def topk_reduce_rows(sim_rows: jnp.ndarray, k: int):
+    """Reduce finalized similarity rows to their top-K edge lists.
+
+    Returns ``(ids [R, k], sims [R, k], spill [R])``: the K largest
+    entries per row (``lax.top_k`` order — descending, ties by ascending
+    column) with non-positive entries masked to ``(id=-1, sim=0)``, plus
+    the (K+1)-th largest value (0 when it does not exist or is not
+    positive) — the exactness certificate of ``TopKSim``.
+    """
+    kk = min(k + 1, sim_rows.shape[1])
+    vals, idx = jax.lax.top_k(sim_rows, kk)
+    return _topk_tail(vals, idx, k)
+
+
+def topk_stream(panel_raw_fn, table: SubtrajTable, *, k: int,
+                panel: int | None = None,
+                active: jnp.ndarray | None = None) -> TopKSim:
+    """Drive the panel sweep: raw orientations -> finalize -> top-K.
+
+    ``panel_raw_fn(p0)`` must return the two raw orientations
+    ``(fwd [Sb, S], rev [Sb, S])`` of the rows ``[p0, p0 + Sb)`` — from a
+    join-cube scatter (``similarity_topk``) or a fused Pallas re-sweep
+    (``kernels.stjoin.ops.stjoin_sim_panel_fused``).  Only one panel's
+    ``[Sb, S]`` slabs are ever live; the scan stacks the ``[Sb, K]``
+    reductions into the final ``[S, K]`` lists.
+    """
+    S = table.num_slots
+    k = min(k, S)
+    Sb = plan_panel(S, panel)
+
+    def body(_, p):
+        sim_rows = finalize_sim_panel(*panel_raw_fn(p * Sb), p * Sb, table,
+                                      active=active)
+        rows = p * Sb + jnp.arange(Sb)
+        cnt, rsum, rsumsq = sim_row_moments(
+            sim_rows, table.valid[rows], table.valid)
+        ids, sims, spill = topk_reduce_rows(sim_rows, k)
+        return None, (ids, sims, spill, cnt, rsum, rsumsq)
+
+    _, (ids, sims, spill, cnt, rsum, rsumsq) = jax.lax.scan(
+        body, None, jnp.arange(S // Sb))
+    return TopKSim(
+        ids=ids.reshape(S, k), sims=sims.reshape(S, k),
+        spill=spill.reshape(S), degree=cnt.reshape(S),
+        row_sum=rsum.reshape(S), row_sumsq=rsumsq.reshape(S))
+
+
+def contribution_panel_raw(src: jnp.ndarray, dst: jnp.ndarray,
+                           w: jnp.ndarray, S: int, Sb: int):
+    """``panel_raw(p0)`` closure over a flat contribution list: scatter
+    the contributions whose src (fwd) / dst (rev) falls inside the live
+    panel, in both orientations, into ``[Sb, S]`` slabs (sentinel row
+    ``Sb`` / column ``S`` absorbs the rest).  The one scatter
+    implementation behind ``similarity_topk`` and the contribution-level
+    CI gate (``benchmarks/kernel_bench.py``).
+    """
+    def panel_raw(p0):
+        ls = jnp.where((src >= p0) & (src < p0 + Sb), src - p0, Sb)
+        fwd = jnp.zeros((Sb + 1, S + 1), jnp.float32).at[ls, dst].add(w)
+        ld = jnp.where((dst >= p0) & (dst < p0 + Sb), dst - p0, Sb)
+        rev = jnp.zeros((Sb + 1, S + 1), jnp.float32).at[ld, src].add(w)
+        return fwd[:Sb, :S], rev[:Sb, :S]
+
+    return panel_raw
+
+
+def similarity_topk(join: JoinResult, ref_seg: SubtrajSegmentation,
+                    cand_seg_sub_local: jnp.ndarray, table: SubtrajTable,
+                    max_subs: int, *, k: int,
+                    panel: int | None = None) -> TopKSim:
+    """Sparse SP relation from a materialized join: the panel-streamed
+    counterpart of ``similarity_matrix`` — same contribution list
+    (``scatter_operands``), same per-cell accumulation order, but the
+    ``[S, S]`` matrix never exists.
+    """
+    S = table.num_slots
+    src, dst, w = scatter_operands(join, ref_seg, cand_seg_sub_local, S,
+                                   max_subs)
+    Sb = plan_panel(S, panel)
+    return topk_stream(contribution_panel_raw(src, dst, w, S, Sb), table,
+                       k=k, panel=Sb)
+
+
+def topk_from_dense(sim: jnp.ndarray, table: SubtrajTable, k: int,
+                    active: jnp.ndarray | None = None) -> TopKSim:
+    """TopKSim of an already-finalized dense matrix (tests / oracles).
+
+    Row content equals what the panel sweep sees, so the lists, spill,
+    and moments are bit-identical to ``similarity_topk``'s.
+    """
+    S = table.num_slots
+    k = min(k, S)
+    valid = table.valid if active is None else table.valid & active
+    if active is not None:
+        sim = jnp.where(active[:, None] & active[None, :], sim, 0.0)
+    cnt, rsum, rsumsq = sim_row_moments(sim, valid, valid)
+    ids, sims, spill = topk_reduce_rows(sim, k)
+    return TopKSim(ids=ids, sims=sims, spill=spill, degree=cnt,
+                   row_sum=rsum, row_sumsq=rsumsq)
+
+
+def merge_topk_blocks(ids: jnp.ndarray, sims: jnp.ndarray, k: int):
+    """K-way merge of per-block top-(K+1) lists into global top-K + spill.
+
+    ``ids [S, B*(K+1)]`` / ``sims`` concatenate the blocks' candidate
+    lists (disjoint column ranges, exact values).  The global top-(K+1)
+    of a row is always contained in the union of its blocks' top-(K+1)
+    lists, so the merged top-K and the merged (K+1)-th value (the spill
+    certificate) are exactly those of the full row.
+    """
+    kk = min(k + 1, sims.shape[1])
+    vals, pos = jax.lax.top_k(sims, kk)
+    return _topk_tail(vals, jnp.take_along_axis(ids, pos, axis=1), k)
+
+
+def topk_overflow(topk: TopKSim, alpha) -> jnp.ndarray:
+    """Per-row exactness-certificate violations (int32 count).
+
+    A row overflows when its spill value — the largest similarity K
+    truncated away — is itself a potential alpha-edge: some edge the
+    clustering engines need may be missing.  ``overflow == 0`` therefore
+    *proves* K bounded every row's true alpha-degree and the top-K labels
+    equal the dense oracle's bit for bit.
+    """
+    over = (topk.spill > 0.0) & (topk.spill >= alpha)
+    return jnp.sum(over).astype(jnp.int32)
+
+
+def finalize_sim_cols(sym_blk: jnp.ndarray, c0, table: SubtrajTable,
+                      active: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Eq. 2 finalization of a symmetrized *column block* ``[S, S_loc]``.
+
+    The distributed top-K path symmetrizes per model rank: each rank owns
+    columns ``[c0, c0 + S_loc)`` of ``raw`` and, after the transpose-
+    partner all_to_all, the matching rows of ``raw.T`` — so
+    ``sym_blk[i, j] = max(raw[i, c0+j], raw[c0+j, i])`` is exact.  Masks
+    and normalization mirror ``finalize_sim`` cell for cell.
+    """
+    S, S_loc = sym_blk.shape
+    rows = jnp.arange(S)
+    cols = c0 + jnp.arange(S_loc)
+    denom = jnp.minimum(table.card[:, None], table.card[cols][None, :])
+    sim = sym_blk / jnp.maximum(denom, 1).astype(jnp.float32)
+    keep = (table.valid[:, None] & table.valid[cols][None, :]
+            & (rows[:, None] != cols[None, :]))
+    if active is not None:
+        keep &= active[:, None] & active[cols][None, :]
+    return jnp.where(keep, sim, 0.0)

@@ -14,6 +14,8 @@ Paper mapping
 * ``SubtrajSegmentation``    <- the cutting-point vector CP[] (Problems 2)
 * ``SubtrajTable``           <- the ST relation: (t_s, t_e, V, Card) per subtraj
 * ``SimilarityMatrix``       <- the SP relation (adjacency lists, densified)
+* ``TopKSim``                <- the SP relation kept sparse: per-row top-K
+                                neighbor lists + an exactness certificate
 * ``ClusteringResult``       <- the sets C (clusters) and O (outliers)
 """
 from __future__ import annotations
@@ -142,6 +144,47 @@ class SubtrajTable:
     @property
     def num_slots(self) -> int:
         return self.t_start.shape[0]
+
+
+@pytree_dataclass
+class TopKSim:
+    """Sparse SP relation: per-row top-K neighbor lists of the symmetrized,
+    Eq. 2-normalized similarity matrix — the paper's adjacency lists,
+    bounded to a static width ``K`` instead of densified to ``[S, S]``.
+
+    Rows are sorted by similarity descending (``lax.top_k`` order: ties by
+    ascending neighbor slot).  Entries beyond the row's positive degree
+    carry ``ids == -1`` and ``sims == 0``.
+
+    Exactness certificate: ``spill[s]`` is the (K+1)-th largest positive
+    similarity of row ``s`` (0 when the row has at most K positive
+    entries).  Every dropped entry of row ``s`` is ``<= spill[s]``, so
+    whenever ``spill[s] < alpha`` the list provably contains *every*
+    alpha-edge of ``s`` — and the clustering engines consuming this
+    structure are label-identical to the dense oracle.  ``spill >= alpha``
+    anywhere means K may have truncated a real alpha-edge: the overflow
+    counter (``repro.core.similarity.topk_overflow``) is then nonzero and
+    callers must widen K (``run_dsc`` auto-retries) or fail loudly.
+
+    ``degree`` and the ``row_*`` moments are exact per-row statistics of
+    the full (un-truncated) positive row — ``resolve_thresholds`` derives
+    the same alpha/k from them as from the dense matrix.
+    """
+
+    ids: jnp.ndarray         # [S, K] int32 neighbor slot ids (-1 padding)
+    sims: jnp.ndarray        # [S, K] float32, descending per row
+    spill: jnp.ndarray       # [S] float32 (K+1)-th largest positive sim
+    degree: jnp.ndarray      # [S] int32 positive entries of the full row
+    row_sum: jnp.ndarray     # [S] float32 sum of positive entries
+    row_sumsq: jnp.ndarray   # [S] float32 sum of squared positive entries
+
+    @property
+    def num_slots(self) -> int:
+        return self.ids.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.ids.shape[1]
 
 
 @pytree_dataclass

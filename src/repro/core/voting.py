@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.types import JoinResult
+from repro.core.windows import pack_bits
 
 
 def point_voting(join: JoinResult) -> jnp.ndarray:
@@ -35,11 +36,6 @@ def neighbor_mask_packed(join: JoinResult) -> jnp.ndarray:
 
     Bit ``c`` of word ``c // 32`` is set iff candidate trajectory ``c`` has a
     (delta_t-surviving) match with this point.  Shape: ``[T, M, ceil(C/32)]``.
+    Packing is the shared ``repro.core.windows.pack_bits`` word layout.
     """
-    T, M, C = join.best_w.shape
-    W = -(-C // 32)
-    matched = join.best_w > 0.0
-    pad = jnp.pad(matched, ((0, 0), (0, 0), (0, W * 32 - C)))
-    bits = pad.reshape(T, M, W, 32).astype(jnp.uint32)
-    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
-    return jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)   # [T, M, W]
+    return pack_bits(join.best_w > 0.0)                         # [T, M, W]

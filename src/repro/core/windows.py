@@ -148,3 +148,32 @@ def window_pair(sig: jnp.ndarray, w: int, op: str):
     ``W1 = [n-w, n-1]`` and ``W2 = [n, n+w-1]``.  Returns ``(r1, r2)``."""
     return (sliding_reduce(sig, -w, -1, op),
             sliding_reduce(sig, 0, w - 1, op))
+
+
+# ---------------------------------------------------------------------------
+# Packed-word helpers — the one bit-packing implementation for the whole
+# pipeline.  TSA2 neighbor sets travel as uint32 words everywhere (the
+# packed-word engine above, the fused join epilogues, the distributed
+# all_gather payload); packing previously lived inline at each call site
+# (``voting.neighbor_mask_packed``, ``distributed._pack_bits``), which is
+# exactly how bit-layout drift starts.  Both now call here (bit-equality
+# pinned in tests/test_windows.py).
+# ---------------------------------------------------------------------------
+
+
+def pack_bits(b: jnp.ndarray) -> jnp.ndarray:
+    """[..., C] bool -> [..., ceil(C/32)] uint32, bit c of word c // 32."""
+    C = b.shape[-1]
+    W = -(-C // 32)
+    pad = jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, W * 32 - C)])
+    bits = pad.reshape(*b.shape[:-1], W, 32).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jnp.ndarray, C: int | None = None) -> jnp.ndarray:
+    """[..., W] uint32 -> [..., C] bool (inverse of ``pack_bits``)."""
+    W = words.shape[-1]
+    bits = ((words[..., None] >> jnp.arange(32, dtype=jnp.uint32)) & 1)
+    out = bits.astype(bool).reshape(*words.shape[:-1], W * 32)
+    return out if C is None else out[..., :C]

@@ -137,3 +137,98 @@ def assign_pallas(sim, rank, is_rep, valid, alpha, *,
     )(sim, rank.astype(jnp.int32), is_rep.astype(jnp.bool_),
       valid.astype(jnp.bool_), thr)
     return w, jnp.where(w > 0.0, slot, -1)
+
+
+# ---------------------------------------------------------------------------
+# Neighbor-list (top-K) kernels: the same two reductions on the sparse
+# ``TopKSim`` rows.  The [S, S] matrix sweep becomes a [S, K] list sweep —
+# one row-tile grid, no contraction axis (a slot's whole adjacency fits its
+# K-entry list row), with the rank/state vectors resident per instance and
+# read through an in-tile gather.  O(S*K) HBM traffic per round.
+# ---------------------------------------------------------------------------
+
+
+def _topk_round_scan_kernel(ids, sims, rank_rows, rank_full, unresolved,
+                            is_rep, thr, out_blocked, out_claimed):
+    alpha = thr[0]
+    uid = ids[...]                                 # [bs, K]
+    v = sims[...]
+    rk = rank_full[...]                            # [Sp]
+    S = rk.shape[0]
+    safe = jnp.clip(uid, 0, S - 1)
+    edge = (uid >= 0) & (v > 0.0) & (v >= alpha)
+    pred = edge & (rk[safe] < rank_rows[...][:, None])
+    out_blocked[...] = jnp.any(pred & unresolved[...][safe], axis=1)
+    out_claimed[...] = jnp.any(pred & is_rep[...][safe], axis=1)
+
+
+def _topk_assign_kernel(ids, sims, rank_full, is_rep, valid_rows, thr,
+                        out_w, out_slot):
+    alpha = thr[0]
+    uid = ids[...]                                 # [bs, K]
+    v = sims[...]
+    rk = rank_full[...]
+    S = rk.shape[0]
+    bs = uid.shape[0]
+    safe = jnp.clip(uid, 0, S - 1)
+    claim = ((uid >= 0) & valid_rows[...][:, None] & (v > 0.0)
+             & (v >= alpha) & is_rep[...][safe])
+    w = jnp.where(claim, v, 0.0)
+    best_w = jnp.max(w, axis=1)                    # [bs]
+    cand = claim & (w == best_w[:, None]) & (best_w[:, None] > 0.0)
+    r = jnp.where(cand, rk[safe], _BIG_RANK)
+    e = jnp.argmin(r, axis=1).astype(jnp.int32)
+    slot = safe[jnp.arange(bs), e]
+    out_w[...] = best_w
+    out_slot[...] = jnp.where(best_w > 0.0, slot, -1)
+
+
+def _topk_specs(bs: int, K: int, Sp: int):
+    list_spec = pl.BlockSpec((bs, K), lambda i: (i, 0))
+    row_spec = pl.BlockSpec((bs,), lambda i: (i,))
+    full_spec = pl.BlockSpec((Sp,), lambda i: (0,))
+    thr_spec = pl.BlockSpec((1,), lambda i: (0,))
+    return list_spec, row_spec, full_spec, thr_spec
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def topk_round_scan_pallas(ids, sims, rank, unresolved, is_rep, alpha, *,
+                           bs: int = 8, interpret: bool = True):
+    """(blocked [S], claimed [S]) for one round; S divisible by bs."""
+    S, K = ids.shape
+    assert S % bs == 0, (S, bs)
+    thr = jnp.asarray(alpha, jnp.float32).reshape(1)
+    list_spec, row_spec, full_spec, thr_spec = _topk_specs(bs, K, S)
+    return pl.pallas_call(
+        _topk_round_scan_kernel,
+        grid=(S // bs,),
+        in_specs=[list_spec, list_spec, row_spec, full_spec, full_spec,
+                  full_spec, thr_spec],
+        out_specs=[row_spec, row_spec],
+        out_shape=[jax.ShapeDtypeStruct((S,), jnp.bool_)] * 2,
+        interpret=interpret,
+    )(ids.astype(jnp.int32), sims, rank.astype(jnp.int32),
+      rank.astype(jnp.int32), unresolved.astype(jnp.bool_),
+      is_rep.astype(jnp.bool_), thr)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def topk_assign_pallas(ids, sims, rank, is_rep, valid, alpha, *,
+                       bs: int = 8, interpret: bool = True):
+    """(best_w [S], best_slot [S]) claim-max over neighbor lists."""
+    S, K = ids.shape
+    assert S % bs == 0, (S, bs)
+    thr = jnp.asarray(alpha, jnp.float32).reshape(1)
+    list_spec, row_spec, full_spec, thr_spec = _topk_specs(bs, K, S)
+    w, slot = pl.pallas_call(
+        _topk_assign_kernel,
+        grid=(S // bs,),
+        in_specs=[list_spec, list_spec, full_spec, full_spec, row_spec,
+                  thr_spec],
+        out_specs=[row_spec, row_spec],
+        out_shape=[jax.ShapeDtypeStruct((S,), jnp.float32),
+                   jax.ShapeDtypeStruct((S,), jnp.int32)],
+        interpret=interpret,
+    )(ids.astype(jnp.int32), sims, rank.astype(jnp.int32),
+      is_rep.astype(jnp.bool_), valid.astype(jnp.bool_), thr)
+    return w, slot

@@ -67,3 +67,48 @@ def cluster_assign(sim, rank, is_rep, valid, alpha, *,
     w, slot = assign_pallas(sim_p, rank_p, rep_p, valid_p, alpha,
                             bu=bu, bs=bs, interpret=interpret)
     return w[:S], slot[:S]
+
+
+def _padded_topk(ids, sims, rank, vecs, bs: int):
+    """Pad neighbor-list operands to the row-tile multiple.
+
+    Padded slots carry empty lists (``ids == -1``, zero sims), all-False
+    state, and fresh distinct ranks, so they join no reduction and are
+    sliced off by the callers.
+    """
+    S = ids.shape[0]
+    Sp = -(-S // bs) * bs
+    if Sp == S:
+        return ids, sims, rank, vecs
+    pad = Sp - S
+    ids_p = jnp.pad(ids, ((0, pad), (0, 0)), constant_values=-1)
+    sims_p = jnp.pad(sims, ((0, pad), (0, 0)))
+    rank_p = jnp.concatenate(
+        [rank.astype(jnp.int32), jnp.arange(S, Sp, dtype=jnp.int32)])
+    vecs_p = [jnp.pad(v, (0, pad), constant_values=False) for v in vecs]
+    return ids_p, sims_p, rank_p, vecs_p
+
+
+def topk_cluster_round_scan(ids, sims, rank, unresolved, is_rep, alpha, *,
+                            bs: int = 8, interpret: bool = True):
+    """(blocked [S], claimed [S]) — one round scan over [S, K] lists."""
+    from repro.kernels.cluster.cluster import topk_round_scan_pallas
+    S = ids.shape[0]
+    ids_p, sims_p, rank_p, (unres_p, rep_p) = _padded_topk(
+        ids, sims, rank, [unresolved, is_rep], bs)
+    blocked, claimed = topk_round_scan_pallas(
+        ids_p, sims_p, rank_p, unres_p, rep_p, alpha, bs=bs,
+        interpret=interpret)
+    return blocked[:S], claimed[:S]
+
+
+def topk_cluster_assign(ids, sims, rank, is_rep, valid, alpha, *,
+                        bs: int = 8, interpret: bool = True):
+    """(best_w [S], best_slot [S]) — claim-max over [S, K] lists."""
+    from repro.kernels.cluster.cluster import topk_assign_pallas
+    S = ids.shape[0]
+    ids_p, sims_p, rank_p, (rep_p, valid_p) = _padded_topk(
+        ids, sims, rank, [is_rep, valid], bs)
+    w, slot = topk_assign_pallas(ids_p, sims_p, rank_p, rep_p, valid_p,
+                                 alpha, bs=bs, interpret=interpret)
+    return w[:S], slot[:S]

@@ -53,3 +53,51 @@ def claim_max_ref(sim, order, rank, is_rep, valid, alpha):
     best_rank = jnp.min(r, axis=0)                 # min rank among maxima
     best_slot = order[jnp.clip(best_rank, 0, S - 1)]
     return best_w, jnp.where(best_w > 0.0, best_slot, -1)
+
+
+# ---------------------------------------------------------------------------
+# Neighbor-list (top-K) variants: the same two reductions on the sparse
+# ``TopKSim`` representation.  Edges live on rows — row ``s`` holds ``s``'s
+# alpha-adjacency (the matrix is max-symmetrized, so sim[u, s] == sim[s, u]
+# and either endpoint's list carries the edge).  O(S * K) per call instead
+# of O(S^2); exact whenever the per-row spill certificate holds
+# (``TopKSim`` docstring).
+# ---------------------------------------------------------------------------
+
+
+def topk_round_scan_ref(ids, sims, rank, unresolved, is_rep, alpha):
+    """One round's eligibility scan over ``[S, K]`` neighbor lists.
+
+    For column slot ``s`` (a list row), an entry ``u = ids[s, e]`` is a
+    predecessor when the edge is an alpha-edge and ``rank[u] < rank[s]``
+    — exactly ``round_scan_ref``'s predicate read from ``s``'s side of
+    the symmetric matrix.
+    """
+    S = rank.shape[0]
+    safe = jnp.clip(ids, 0, S - 1)
+    edge = (ids >= 0) & (sims > 0.0) & (sims >= alpha)
+    pred = edge & (rank[safe] < rank[:, None])
+    blocked = jnp.any(pred & unresolved[safe], axis=1)
+    claimed = jnp.any(pred & is_rep[safe], axis=1)
+    return blocked, claimed
+
+
+def topk_claim_max_ref(ids, sims, rank, is_rep, valid, alpha):
+    """Final membership claim-max over ``[S, K]`` neighbor lists.
+
+    Per slot ``s``: the representative neighbor of maximum similarity,
+    minimum visit rank among ties — ``claim_max_ref`` restricted to the
+    retained edges.  Returns ``(best_w [S], best_slot [S])`` with
+    ``(0.0, -1)`` where no representative claims the slot.
+    """
+    S = rank.shape[0]
+    safe = jnp.clip(ids, 0, S - 1)
+    claim = ((ids >= 0) & valid[:, None] & (sims > 0.0) & (sims >= alpha)
+             & is_rep[safe])
+    w = jnp.where(claim, sims, 0.0)
+    best_w = jnp.max(w, axis=1)
+    cand = claim & (w == best_w[:, None]) & (best_w[:, None] > 0.0)
+    r = jnp.where(cand, rank[safe], S)
+    e = jnp.argmin(r, axis=1)
+    best_slot = jnp.take_along_axis(safe, e[:, None], axis=1)[:, 0]
+    return best_w, jnp.where(best_w > 0.0, best_slot, -1)

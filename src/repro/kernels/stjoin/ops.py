@@ -29,6 +29,8 @@ from repro.kernels.stjoin.stjoin import (
     stjoin_pallas_pruned,
     stjoin_sim_fused_flat,
     stjoin_sim_fused_pruned_flat,
+    stjoin_sim_panel_fused_flat,
+    stjoin_sim_panel_fused_pruned_flat,
     stjoin_vote_fused_flat,
     stjoin_vote_fused_pruned_flat,
 )
@@ -420,6 +422,86 @@ def stjoin_sim_fused(ref: TrajectoryBatch, cand: TrajectoryBatch,
         cand.x, cand.y, cand.t, cand.valid, cand.traj_id, cand_gid,
         n_src, n_dst, eps_sp, eps_t, delta_t, rows=rows, bc=bc, bm=bm,
         tile_ids=tile_ids, interpret=interpret)
+
+
+def stjoin_sim_panel_fused_arrays(rx, ry, rt, rvalid, rid, ref_gid, cx, cy,
+                                  ct, cvalid, cid, cand_gid, n_src: int,
+                                  n_dst: int, eps_sp, eps_t, delta_t, p0,
+                                  *, panel: int, tile_ids=None,
+                                  rows: int | None = None,
+                                  bc: int = 16, bm: int = 128,
+                                  interpret: bool | None = None):
+    """Fused pass 2 on raw arrays, panel-streamed: one ``Sb``-row panel of
+    the raw similarity scatter in both orientations.
+
+    Returns ``(fwd [panel, n_dst], rev [panel, n_src])`` where
+    ``fwd[i, j] = raw[p0 + i, j]`` and ``rev[i, j] = raw[j, p0 + i]`` of
+    the dense accumulator ``stjoin_sim_fused_arrays`` would build —
+    bit-equal cell sums, panel rows only.  ``p0`` may be traced (the
+    panel loop re-invokes one trace); ``panel`` is static.  ``tile_ids``
+    (from ``plan_fused_tiles`` with identical geometry) sweeps only the
+    index-surviving candidate tiles per panel; identical output either
+    way (pruned tiles contribute exactly 0).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    T, M = rx.shape
+    C, Mc = cx.shape
+    rows, bc, bm, mc_pad = _fused_geometry(T, M, Mc, rows, bc, bm)
+    tile_ids = _resolve_plan(tile_ids, rows, bc, bm)
+    ref_ops = _fused_ref_operands(rx, ry, rt, rvalid, rid, rows)
+    padT = (-T) % rows
+    gid_flat = jnp.pad(ref_gid.astype(jnp.int32), ((0, padT), (0, 0)),
+                       constant_values=n_src).reshape(-1)
+    cand_ops = _fused_cand_operands(cx, cy, ct, cvalid, cid, bm, mc_pad)
+    padC = (-C) % 32
+    cgid = jnp.pad(cand_gid.astype(jnp.int32), ((0, padC), (0, mc_pad)),
+                   constant_values=n_dst)
+
+    p0 = jnp.asarray(p0, jnp.int32)
+    lgid = jnp.where((gid_flat >= p0) & (gid_flat < p0 + panel),
+                     gid_flat - p0, panel)
+    clgid = jnp.where((cgid >= p0) & (cgid < p0 + panel), cgid - p0, panel)
+
+    if tile_ids is None:
+        return stjoin_sim_panel_fused_flat(
+            *ref_ops, gid_flat, lgid, *cand_ops, cgid, clgid, eps_sp,
+            eps_t, delta_t, rows=rows, M=M, n_src=n_src, n_dst=n_dst,
+            panel=panel, bc=bc, bm=bm, interpret=interpret)
+    return stjoin_sim_panel_fused_pruned_flat(
+        *ref_ops, gid_flat, lgid, *cand_ops, cgid, clgid, tile_ids,
+        eps_sp, eps_t, delta_t, rows=rows, M=M, n_src=n_src, n_dst=n_dst,
+        panel=panel, bc=bc, bm=bm, interpret=interpret)
+
+
+def stjoin_sim_panel_fused(ref: TrajectoryBatch, cand: TrajectoryBatch,
+                           ref_sub_local, cand_sub_local, max_subs: int,
+                           eps_sp, eps_t, delta_t=0.0, *, p0, panel: int,
+                           tile_ids=None, rows: int | None = None,
+                           bc: int = 16, bm: int = 128,
+                           interpret: bool | None = None):
+    """Batch-level panel-streamed fused pass 2 (cf. ``stjoin_sim_fused``).
+
+    Slot maps mirror ``similarity_matrix``; the returned orientations feed
+    ``repro.core.similarity.topk_stream``'s panel finalization.
+    """
+    T, M = ref.x.shape
+    C, Mc = cand.x.shape
+    n_src = T * max_subs
+    n_dst = C * max_subs
+    ref_gid = jnp.where(
+        ref_sub_local >= 0,
+        jnp.arange(T, dtype=jnp.int32)[:, None] * max_subs
+        + ref_sub_local, n_src)
+    cand_gid = jnp.where(
+        cand_sub_local >= 0,
+        jnp.arange(C, dtype=jnp.int32)[:, None] * max_subs
+        + cand_sub_local, n_dst)
+    return stjoin_sim_panel_fused_arrays(
+        ref.x, ref.y, ref.t, ref.valid, ref.traj_id, ref_gid,
+        cand.x, cand.y, cand.t, cand.valid, cand.traj_id, cand_gid,
+        n_src, n_dst, eps_sp, eps_t, delta_t, p0, panel=panel,
+        tile_ids=tile_ids, rows=rows, bc=bc, bm=bm, interpret=interpret)
 
 
 def subtrajectory_join(ref: TrajectoryBatch, cand: TrajectoryBatch,

@@ -383,6 +383,194 @@ def _sim_kernel_pruned(ref_x, ref_y, ref_t, ref_id, ref_ok, ref_gid,
                   (i == 0) & (s == 0))
 
 
+def _sim_panel_epilogue(w, idx, ref_gid, ref_lgid, cand_gid, cand_lgid,
+                        out_fwd, out_rev, first):
+    """Scatter a refined tile into one row panel — in BOTH orientations.
+
+    The top-K streaming engine (DESIGN.md §8) consumes the similarity
+    matrix one ``Sb``-row panel at a time and needs each panel's rows of
+    ``raw`` *and* of ``raw.T`` so the max-symmetrization stays exact
+    without ever holding ``[S, S]``:
+
+        fwd[src - p0, dst] += w      (the panel's rows of ``raw``)
+        rev[dst - p0, src] += w      (the panel's rows of ``raw.T``)
+
+    ``ref_lgid`` / ``cand_lgid`` are the panel-localized slot maps
+    (sentinel ``Sb`` outside the panel, computed by the wrapper), so both
+    scatters hit a ``[Sb + 1, S + 1]`` accumulator.  Contributions arrive
+    in the same tile order as ``_sim_epilogue``'s dense scatter, keeping
+    per-cell sums bit-equal to the dense raw matrix's.
+    """
+    bc, Mc = cand_gid.shape
+    sent_c = out_fwd.shape[1] - 1
+    sent_r = out_fwd.shape[0] - 1
+
+    @pl.when(first)
+    def _init():
+        out_fwd[...] = jnp.zeros_like(out_fwd)
+        out_rev[...] = jnp.zeros_like(out_rev)
+
+    cols = jnp.arange(bc)[None, :]
+    safe = jnp.clip(idx, 0, Mc - 1)
+    ok = (w > 0.0) & (idx >= 0)
+    dst = jnp.where(ok, cand_gid[cols, safe], sent_c)        # [bp, bc]
+    dst_l = jnp.where(ok, cand_lgid[cols, safe], sent_r)
+    src = jnp.broadcast_to(ref_gid[:, None], w.shape)
+    src_l = jnp.broadcast_to(ref_lgid[:, None], w.shape)
+    out_fwd[...] = out_fwd[...].at[src_l, dst].add(w)
+    out_rev[...] = out_rev[...].at[dst_l, src].add(w)
+
+
+def _sim_panel_kernel(ref_x, ref_y, ref_t, ref_id, ref_ok, ref_gid, ref_lgid,
+                      cand_x, cand_y, cand_t, cand_id, cand_ok, cand_gid,
+                      cand_lgid, eps, out_fwd, out_rev, *, rows: int, M: int,
+                      bc: int, bm: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    w, idx = _sweep_best(ref_x[...], ref_y[...], ref_t[...], ref_id[...],
+                         ref_ok[...], cand_x[...], cand_y[...], cand_t[...],
+                         cand_id[...], cand_ok[...], eps[0], eps[1], bm,
+                         True)
+    w = _run_refine(w, ref_t[...], rows, M, eps[2])
+    _sim_panel_epilogue(w, idx, ref_gid[...], ref_lgid[...], cand_gid[...],
+                        cand_lgid[...], out_fwd, out_rev,
+                        (i == 0) & (j == 0))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows", "M", "bc", "bm", "n_src", "n_dst", "panel",
+                     "interpret"))
+def stjoin_sim_panel_fused_flat(ref_x, ref_y, ref_t, ref_id, ref_ok, ref_gid,
+                                ref_lgid, cand_x, cand_y, cand_t, cand_id,
+                                cand_ok, cand_gid, cand_lgid, eps_sp, eps_t,
+                                delta_t, *, rows: int, M: int, n_src: int,
+                                n_dst: int, panel: int, bc: int = 8,
+                                bm: int = 128, interpret: bool = True):
+    """Fused pass 2, panel-streamed: ``(fwd [Sb, n_dst], rev [Sb, n_src])``.
+
+    Identical tile sweep to ``stjoin_sim_fused_flat`` (same recompute of
+    the best-match contraction after segmentation), but the epilogue
+    accumulates only one ``Sb``-row panel of the similarity scatter — in
+    both orientations — so the whole call's output is O(Sb * S) instead of
+    O(S^2).  ``ref_lgid`` / ``cand_lgid`` hold the panel-localized slot of
+    each point (``panel`` = Sb sentinel for out-of-panel slots); the
+    caller sweeps panels by re-invoking with shifted localizations (a
+    traced offset — one trace covers every panel).
+    """
+    P = ref_x.shape[0]
+    C, Mc = cand_x.shape
+    bp = rows * M
+    assert P % bp == 0 and C % bc == 0 and Mc % bm == 0, (P, C, Mc, bp, bc, bm)
+
+    eps = _fused_eps(eps_sp, eps_t, delta_t)
+    grid = (P // bp, C // bc)
+    ref_spec = pl.BlockSpec((bp,), lambda i, j: (i,))
+    cand_spec = pl.BlockSpec((bc, Mc), lambda i, j: (j, 0))
+    cid_spec = pl.BlockSpec((bc,), lambda i, j: (j,))
+    eps_spec = pl.BlockSpec((3,), lambda i, j: (0,))
+    fwd_spec = pl.BlockSpec((panel + 1, n_dst + 1), lambda i, j: (0, 0))
+    rev_spec = pl.BlockSpec((panel + 1, n_src + 1), lambda i, j: (0, 0))
+
+    fwd, rev = pl.pallas_call(
+        functools.partial(_sim_panel_kernel, rows=rows, M=M, bc=bc, bm=bm),
+        grid=grid,
+        in_specs=[ref_spec] * 5 + [ref_spec] * 2 + [cand_spec] * 3
+        + [cid_spec, cand_spec, cand_spec, cand_spec, eps_spec],
+        out_specs=[fwd_spec, rev_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((panel + 1, n_dst + 1), jnp.float32),
+            jax.ShapeDtypeStruct((panel + 1, n_src + 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ref_x, ref_y, ref_t, ref_id.astype(jnp.int32),
+      ref_ok.astype(jnp.bool_), ref_gid.astype(jnp.int32),
+      ref_lgid.astype(jnp.int32), cand_x, cand_y, cand_t,
+      cand_id.astype(jnp.int32), cand_ok.astype(jnp.bool_),
+      cand_gid.astype(jnp.int32), cand_lgid.astype(jnp.int32), eps)
+    return fwd[:panel, :n_dst], rev[:panel, :n_src]
+
+
+def _sim_panel_kernel_pruned(ref_x, ref_y, ref_t, ref_id, ref_ok, ref_gid,
+                             ref_lgid, cand_x, cand_y, cand_t, cand_id,
+                             cand_ok, cand_gid, cand_lgid, eps, out_fwd,
+                             out_rev, *, rows: int, M: int, bc: int,
+                             bm: int):
+    i = pl.program_id(0)
+    s = pl.program_id(1)
+    w, idx = _sweep_best(ref_x[...], ref_y[...], ref_t[...], ref_id[...],
+                         ref_ok[...], cand_x[0, 0], cand_y[0, 0],
+                         cand_t[0, 0], cand_id[0, 0], cand_ok[0, 0],
+                         eps[0], eps[1], bm, True)
+    w = _run_refine(w, ref_t[...], rows, M, eps[2])
+    _sim_panel_epilogue(w, idx, ref_gid[...], ref_lgid[...], cand_gid[0, 0],
+                        cand_lgid[0, 0], out_fwd, out_rev,
+                        (i == 0) & (s == 0))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("rows", "M", "bc", "bm", "n_src", "n_dst", "panel",
+                     "interpret"))
+def stjoin_sim_panel_fused_pruned_flat(ref_x, ref_y, ref_t, ref_id, ref_ok,
+                                       ref_gid, ref_lgid, cand_x, cand_y,
+                                       cand_t, cand_id, cand_ok, cand_gid,
+                                       cand_lgid, tile_ids, eps_sp, eps_t,
+                                       delta_t, *, rows: int, M: int,
+                                       n_src: int, n_dst: int, panel: int,
+                                       bc: int = 8, bm: int = 128,
+                                       interpret: bool = True):
+    """Panel-streamed fused pass 2 over the index-pruned tile plan.
+
+    Same gather layout as ``stjoin_sim_fused_pruned_flat``; only the
+    plan's surviving tiles are swept per panel, yet the (fwd, rev) slabs
+    equal the dense panel sweep's (skipped tiles contribute exactly 0).
+    """
+    P = ref_x.shape[0]
+    C, Mc = cand_x.shape
+    bp = rows * M
+    nRb = P // bp
+    nCb = C // bc
+    K = tile_ids.shape[1]
+    assert P % bp == 0 and C % bc == 0 and Mc % bm == 0, (P, C, Mc, bp, bc, bm)
+    assert tile_ids.shape[0] == nRb, (tile_ids.shape, nRb)
+
+    live = tile_ids >= 0
+    safe = jnp.clip(tile_ids, 0, nCb - 1)
+    gather = lambda a: a.reshape(nCb, bc, Mc)[safe]
+    gx, gy, gt = gather(cand_x), gather(cand_y), gather(cand_t)
+    gok = gather(cand_ok.astype(jnp.bool_)) & live[:, :, None, None]
+    gid = cand_id.astype(jnp.int32).reshape(nCb, bc)[safe]
+    ggid = gather(cand_gid.astype(jnp.int32))
+    glgid = gather(cand_lgid.astype(jnp.int32))
+
+    eps = _fused_eps(eps_sp, eps_t, delta_t)
+    grid = (nRb, K)
+    ref_spec = pl.BlockSpec((bp,), lambda i, s: (i,))
+    cand_spec = pl.BlockSpec((1, 1, bc, Mc), lambda i, s: (i, s, 0, 0))
+    cid_spec = pl.BlockSpec((1, 1, bc), lambda i, s: (i, s, 0))
+    eps_spec = pl.BlockSpec((3,), lambda i, s: (0,))
+    fwd_spec = pl.BlockSpec((panel + 1, n_dst + 1), lambda i, s: (0, 0))
+    rev_spec = pl.BlockSpec((panel + 1, n_src + 1), lambda i, s: (0, 0))
+
+    fwd, rev = pl.pallas_call(
+        functools.partial(_sim_panel_kernel_pruned, rows=rows, M=M, bc=bc,
+                          bm=bm),
+        grid=grid,
+        in_specs=[ref_spec] * 5 + [ref_spec] * 2 + [cand_spec] * 3
+        + [cid_spec, cand_spec, cand_spec, cand_spec, eps_spec],
+        out_specs=[fwd_spec, rev_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((panel + 1, n_dst + 1), jnp.float32),
+            jax.ShapeDtypeStruct((panel + 1, n_src + 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ref_x, ref_y, ref_t, ref_id.astype(jnp.int32),
+      ref_ok.astype(jnp.bool_), ref_gid.astype(jnp.int32),
+      ref_lgid.astype(jnp.int32), gx, gy, gt, gid, gok, ggid, glgid, eps)
+    return fwd[:panel, :n_dst], rev[:panel, :n_src]
+
+
 def _fused_eps(eps_sp, eps_t, delta_t):
     return jnp.stack([jnp.asarray(eps_sp, jnp.float32),
                       jnp.asarray(eps_t, jnp.float32),

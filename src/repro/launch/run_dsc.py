@@ -60,6 +60,17 @@ def main(argv=None):
                     help="compute the TSA2 Jaccard signal with the fused "
                          "Pallas segmentation kernel (bit-identical cuts; "
                          "interpret mode on CPU; no-op under tsa1)")
+    ap.add_argument("--sim-mode", default="dense",
+                    choices=["dense", "topk"],
+                    help="SP representation: the dense [S, S] similarity "
+                         "matrix (parity oracle) or panel-streamed top-K "
+                         "neighbor lists — O(S*K) memory, bit-identical "
+                         "labels whenever the overflow certificate is "
+                         "zero (single-host runs auto-widen K; "
+                         "distributed runs fail loudly)")
+    ap.add_argument("--sim-topk", type=int, default=None,
+                    help="K of the top-K neighbor lists (default 32, "
+                         "clamped to S); only with --sim-mode topk")
     ap.add_argument("--segmentation", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -95,7 +106,9 @@ def main(argv=None):
                                   mode=args.mode,
                                   cluster_engine=args.cluster_engine,
                                   cluster_use_kernel=args.cluster_use_kernel,
-                                  seg_use_kernel=args.seg_use_kernel)
+                                  seg_use_kernel=args.seg_use_kernel,
+                                  sim_mode=args.sim_mode,
+                                  sim_topk=args.sim_topk or 32)
         res, table = out.result, out.table
         n_rep = int(np.asarray(res.is_rep).sum())
         n_out = int(np.asarray(res.is_outlier).sum())
@@ -109,7 +122,8 @@ def main(argv=None):
                       use_index=args.use_index, mode=args.mode,
                       cluster_engine=args.cluster_engine,
                       cluster_use_kernel=args.cluster_use_kernel,
-                      seg_use_kernel=args.seg_use_kernel)
+                      seg_use_kernel=args.seg_use_kernel,
+                      sim_mode=args.sim_mode, sim_topk=args.sim_topk)
         s = cluster_summary(out)
         log.info("DSC: %d clusters, %d outliers, RMSE %.4f, SSCR %.2f "
                  "in %.2fs", s["num_clusters"], len(s["outliers"]),

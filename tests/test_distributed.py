@@ -104,6 +104,22 @@ _DRIVER = textwrap.dedent("""
         and (np.asarray(out_s.result.is_rep) == is_rep).all()
         and (np.asarray(out_s.result.is_outlier) == is_out).all())
 
+    # sparse SP relation (sim_mode="topk"): per-rank column blocks +
+    # transpose all_to_all + top-(K+1) allgather merge — bit-identical
+    # global labels whenever the spill certificate is clean, in both
+    # execution modes
+    for key, kw in (("p4_topk", {}), ("p4_topk_fused", {"mode": "fused"})):
+        out_t = run_dsc_distributed(parts, params, mesh, sim_mode="topk",
+                                    sim_topk=48, **kw)
+        report[key + "_overflow"] = int(
+            np.asarray(out_t.sim_diag)[:, 3].sum())
+        report[key + "_agree"] = bool(
+            (np.asarray(out_t.result.member_of) == member_of).all()
+            and (np.asarray(out_t.result.member_sim)
+                 == np.asarray(res.member_sim)).all()
+            and (np.asarray(out_t.result.is_rep) == is_rep).all()
+            and (np.asarray(out_t.result.is_outlier) == is_out).all())
+
     print("JSON" + json.dumps(report))
 """)
 
@@ -171,6 +187,17 @@ def test_p4_cluster_engines_identical(dist_report):
     """Round-parallel vs sequential clustering engine, per partition +
     Algorithm 5 refinement: bit-identical global labels."""
     assert dist_report["p4_cluster_engine_agree"]
+
+
+@pytest.mark.distributed
+@pytest.mark.slow
+def test_p4_topk_sim_identical(dist_report):
+    """sim_mode="topk" (sparse SP relation: [S, K+1] allgather instead of
+    the dense [S, S] psum) is bit-identical to the dense runs in both
+    execution modes, with a clean exactness certificate."""
+    for key in ("p4_topk", "p4_topk_fused"):
+        assert dist_report[key + "_overflow"] == 0
+        assert dist_report[key + "_agree"]
 
 
 def test_partitioning_is_equi_depth():

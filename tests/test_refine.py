@@ -1,0 +1,174 @@
+"""Property suite for cross-partition refinement (Algorithm 5).
+
+``refine_states`` reduces a ``[P, S]`` stack of per-partition clustering
+states to one consistent global state via the paper's case table (a)-(f):
+
+    (a) outlier everywhere            -> outlier, deduplicated
+    (b) Repr in every partition       -> Repr
+    (c) member of several clusters    -> member of the max-similarity one
+    (d) Repr here, member there       -> Repr
+    (e) Repr here, outlier there      -> Repr
+    (f) member here, outlier there    -> member
+
+Each case gets a pinned construction, and a hypothesis-driven comparison
+against a literal numpy transcription of the table covers the mixtures
+(tie-breaks, all-invalid rows, replicated rep-vs-member conflicts).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.refine import refine_states
+
+A, K = jnp.float32(0.5), jnp.float32(1.0)
+
+
+def _refine(member_of, member_sim, is_rep, valid):
+    return refine_states(jnp.asarray(member_of, jnp.int32),
+                         jnp.asarray(member_sim, jnp.float32),
+                         jnp.asarray(is_rep), jnp.asarray(valid), A, K)
+
+
+def _oracle(member_of, member_sim, is_rep, valid):
+    """Literal per-slot case-table reduction (numpy, O(P*S) loops)."""
+    P, S = member_of.shape
+    out_of = np.full(S, -1, np.int32)
+    out_sim = np.zeros(S, np.float32)
+    out_rep = np.zeros(S, bool)
+    out_out = np.zeros(S, bool)
+    for s in range(S):
+        seen = [p for p in range(P) if valid[p, s]]
+        if not seen:
+            continue
+        if any(is_rep[p, s] for p in seen):          # cases b, d, e
+            out_rep[s] = True
+            out_of[s] = s
+            out_sim[s] = np.inf
+            continue
+        members = [p for p in seen
+                   if member_of[p, s] >= 0 and not is_rep[p, s]]
+        if members:                                   # cases c, f
+            best = max(members, key=lambda p: (member_sim[p, s], -p))
+            out_of[s] = member_of[best, s]
+            out_sim[s] = member_sim[best, s]
+        else:                                         # case a
+            out_out[s] = True
+    return out_of, out_sim, out_rep, out_out
+
+
+def test_case_a_outlier_dedup():
+    out = _refine([[-1], [-1]], [[0.0], [0.0]],
+                  [[False], [False]], [[True], [True]])
+    assert bool(out.is_outlier[0]) and int(out.member_of[0]) == -1
+
+
+def test_case_b_rep_everywhere():
+    out = _refine([[0], [0]], [[np.inf], [np.inf]],
+                  [[True], [True]], [[True], [True]])
+    assert bool(out.is_rep[0]) and int(out.member_of[0]) == 0
+    assert not bool(out.is_outlier[0])
+
+
+def test_case_c_member_max_similarity_wins():
+    """Member of cluster 1 (sim 0.4) in P0, of cluster 2 (sim 0.9) in P1."""
+    member_of = [[-1, 1, -1], [-1, 2, -1]]
+    member_sim = [[0.0, 0.4, 0.0], [0.0, 0.9, 0.0]]
+    is_rep = [[True, False, False], [False, False, True]]
+    valid = [[True, True, False], [False, True, True]]
+    out = _refine(member_of, member_sim, is_rep, valid)
+    assert int(out.member_of[1]) == 2
+    assert float(out.member_sim[1]) == pytest.approx(0.9)
+
+
+def test_case_d_rep_beats_member():
+    out = _refine([[0, 0], [1, -1]], [[np.inf, 0.7], [np.inf, 0.0]],
+                  [[True, False], [True, False]],
+                  [[True, True], [True, True]])
+    # slot 1: member of 0 in P0, rep in... nowhere; stays a member
+    assert int(out.member_of[1]) == 0
+    # slot 0: rep in P0 AND (as slot 1's target) rep in P1 -> rep
+    assert bool(out.is_rep[0])
+
+
+def test_case_d_rep_vs_member_conflict():
+    """Replicated slot: claimed as a member in P0, representative in P1."""
+    out = _refine([[2, -1], [0, -1]], [[0.8, 0.0], [np.inf, 0.0]],
+                  [[False, False], [True, False]],
+                  [[True, False], [True, False]])
+    assert bool(out.is_rep[0])
+    assert int(out.member_of[0]) == 0
+    assert float(out.member_sim[0]) == np.inf
+
+
+def test_case_e_rep_beats_outlier():
+    out = _refine([[0], [-1]], [[np.inf], [0.0]],
+                  [[True], [False]], [[True], [True]])
+    assert bool(out.is_rep[0]) and not bool(out.is_outlier[0])
+
+
+def test_case_f_member_beats_outlier():
+    out = _refine([[3], [-1]], [[0.6], [0.0]],
+                  [[False], [False]], [[True], [True]])
+    assert int(out.member_of[0]) == 3
+    assert float(out.member_sim[0]) == pytest.approx(0.6)
+    assert not bool(out.is_outlier[0])
+
+
+def test_all_invalid_rows_carry_no_state():
+    out = _refine([[5], [7]], [[0.9], [0.3]],
+                  [[False], [False]], [[False], [False]])
+    assert int(out.member_of[0]) == -1
+    assert float(out.member_sim[0]) == 0.0
+    assert not bool(out.is_rep[0]) and not bool(out.is_outlier[0])
+
+
+def test_member_sim_tie_breaks_first_partition():
+    """Equal member similarities: argmax picks the lowest partition index,
+    deterministically."""
+    member_of = [[4], [6]]
+    member_sim = [[0.5], [0.5]]
+    flags = [[False], [False]]
+    out = _refine(member_of, member_sim, flags, [[True], [True]])
+    assert int(out.member_of[0]) == 4
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_matches_case_table_oracle(seed):
+    """Random state stacks (reps with +inf sims, members, outliers,
+    invalid rows) reduce exactly like the literal case table."""
+    rng = np.random.default_rng(seed)
+    P, S = rng.integers(1, 5), rng.integers(1, 12)
+    valid = rng.uniform(0, 1, (P, S)) > 0.3
+    state = rng.integers(0, 3, (P, S))          # 0 outlier, 1 member, 2 rep
+    is_rep = state == 2
+    member_of = np.where(is_rep, np.arange(S)[None, :], -1).astype(np.int32)
+    member_sim = np.where(is_rep, np.inf, 0.0).astype(np.float32)
+    is_member = state == 1
+    member_of = np.where(is_member, rng.integers(0, S, (P, S)), member_of)
+    # draw from a 3-value set so cross-partition similarity ties occur
+    member_sim = np.where(
+        is_member, rng.choice([0.25, 0.5, 0.75], (P, S)), member_sim
+    ).astype(np.float32)
+
+    out = _refine(member_of, member_sim, is_rep, valid)
+    o_of, o_sim, o_rep, o_out = _oracle(member_of, member_sim, is_rep, valid)
+    assert np.array_equal(np.asarray(out.member_of), o_of)
+    assert np.array_equal(np.asarray(out.member_sim), o_sim)
+    assert np.array_equal(np.asarray(out.is_rep), o_rep)
+    assert np.array_equal(np.asarray(out.is_outlier), o_out)
+
+
+def test_collapsed_membership_predicate_pinned():
+    """The simplified ``isfinite(best_sim)`` membership test equals the
+    former ``isfinite & (> -inf)`` conjunction on every reachable input:
+    the masked stack holds finite sims (members), -inf (masked), and the
+    mask removes rep rows' +inf before the argmax."""
+    rng = np.random.default_rng(0)
+    vals = np.concatenate([rng.uniform(0, 1, 64).astype(np.float32),
+                           np.full(8, -np.inf, np.float32),
+                           np.full(8, np.inf, np.float32)])
+    old = np.isfinite(vals) & (vals > -np.inf)
+    new = np.isfinite(vals)
+    assert np.array_equal(old, new)

@@ -87,3 +87,33 @@ def test_window_pair_is_w1_w2():
     np.testing.assert_allclose(np.asarray(r2),
                                _naive(np.asarray(d), 0, w - 1, "sum"),
                                atol=1e-5)
+
+
+def test_pack_bits_pins_former_inline_packers():
+    """The shared packed-word helper is bit-equal to the two inline
+    packers it replaced (``voting.neighbor_mask_packed``'s reshape
+    formula and ``distributed._pack_bits``), round-trips through
+    ``unpack_bits``, and keeps the bit-c-of-word-c//32 layout the
+    Jaccard kernels and the fused join epilogues assume."""
+    from repro.core.windows import pack_bits, unpack_bits
+
+    rng = np.random.default_rng(7)
+    for shape, C in (((3, 5, 70), 70), ((4, 33), 33), ((2, 2, 64), 64)):
+        b = rng.uniform(0, 1, shape) > 0.5
+        got = np.asarray(pack_bits(jnp.asarray(b)))
+
+        # the retired inline formula, transcribed verbatim
+        W = -(-C // 32)
+        pad = np.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, W * 32 - C)])
+        bits = pad.reshape(*b.shape[:-1], W, 32).astype(np.uint32)
+        want = np.sum(bits << np.arange(32, dtype=np.uint32), axis=-1,
+                      dtype=np.uint32)
+        assert np.array_equal(got, want)
+        assert np.array_equal(
+            np.asarray(unpack_bits(jnp.asarray(got), C)), b)
+        # layout: bit c lives in word c // 32 at position c % 32
+        idx = np.ndindex(*shape)
+        c0 = next(iter(np.argwhere(b.reshape(-1, C)[0])), None)
+        if c0 is not None:
+            c = int(c0[0])
+            assert (got.reshape(-1, W)[0, c // 32] >> (c % 32)) & 1
