@@ -362,6 +362,76 @@ def bench_segmentation(w: int = 4, tau: float = 0.2, maxS: int = 8,
     return rec
 
 
+def bench_tuning(batch, params, out_dir: str = ".") -> dict:
+    """Autotune the tile plans at the pipeline gate shape; record + gate.
+
+    Runs ``repro.tune.autotune.tune_pipeline`` on the same workload the
+    pipeline bench gates on, writes the winner store to ``PLANS.json``
+    (uploaded next to ``BENCH_pipeline.json`` by CI), and returns the
+    ``tuning`` record: per stage, the default plan vs the measured winner
+    (wall-clock + peak interface bytes + roofline position), plus the
+    merged tuned plan and its end-to-end wall-clock — which makes the
+    fused-vs-kernel-path gap a *tracked per-backend measurement* instead
+    of a recorded-only flag.  The structural gates (winner verified
+    bit-identical to the oracle; winner peak interface bytes <= the
+    default plan's) are asserted by the caller; wall-clock is recorded,
+    never asserted (CPU interpret-path timing, same stance as every
+    other gate here).
+    """
+    from repro.core.dsc import run_dsc_lowerable
+    from repro.core.plan import EnginePlan
+    from repro.tune.autotune import PlanStore, measure_compiled, tune_pipeline
+
+    os.makedirs(out_dir, exist_ok=True)
+    store = PlanStore(os.path.join(out_dir, "PLANS.json"))
+    tuned, results = tune_pipeline(batch, params, store=store)
+    store.save()
+
+    # merged-plan end to end: composing the per-stage winners must keep
+    # the pipeline's bit-exact label contract
+    out_tuned, tuned_wall, _ = measure_compiled(
+        lambda b: run_dsc_lowerable(b, params, tuned), (batch,))
+    out_default = run_dsc_lowerable(batch, params, EnginePlan())
+    merged_identical = all(
+        bool(np.array_equal(np.asarray(getattr(out_tuned.result, f)),
+                            np.asarray(getattr(out_default.result, f))))
+        for f in ("member_of", "is_rep", "is_outlier"))
+
+    def cand(c):
+        return {"plan": c.plan.to_dict(), "wall_us": c.wall_s * 1e6,
+                "peak_interface_bytes": c.peak_interface_bytes,
+                "verified": c.verified, "roofline": c.roofline}
+
+    rec = {
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "plan_store": "PLANS.json",
+        "stages": {
+            stage: {
+                "bucket": r.bucket,
+                "num_candidates": len(r.candidates),
+                "num_verified": sum(c.verified for c in r.candidates),
+                "default": cand(r.default),
+                "winner": cand(r.winner),
+            } for stage, r in results.items()},
+        "tuned_plan": tuned.to_dict(),
+        "e2e": {
+            "default_us": results["join"].default.wall_s * 1e6,
+            "tuned_us": tuned_wall * 1e6,
+            "label_identical": bool(merged_identical),
+        },
+    }
+    for stage, s in rec["stages"].items():
+        csv_row(f"tune_{stage}_winner", s["winner"]["wall_us"],
+                f"peak={s['winner']['peak_interface_bytes']}B;"
+                f"default_peak={s['default']['peak_interface_bytes']}B;"
+                f"verified={s['num_verified']}/{s['num_candidates']}")
+    csv_row("tune_e2e_tuned", rec["e2e"]["tuned_us"],
+            f"default={rec['e2e']['default_us']:.0f}us;"
+            f"identical={merged_identical}")
+    return rec
+
+
 def bench_pipeline(smoke: bool = False, out_dir: str = ".") -> dict:
     """Fused streaming vs materializing DSC pipeline: per-stage wall-clock,
     peak-allocation estimates, and the join-cube elimination proof.
@@ -548,6 +618,10 @@ def bench_pipeline(smoke: bool = False, out_dir: str = ".") -> dict:
         },
     }
 
+    # tile-plan autotuner at the gate shape: default vs measured winners,
+    # winners verified bit-identical before acceptance (gated below)
+    tuning = bench_tuning(batch, params, out_dir=out_dir)
+
     rec = {
         "workload": "ais_like clustered (lane-sorted rows)",
         "smoke": bool(smoke),
@@ -567,6 +641,7 @@ def bench_pipeline(smoke: bool = False, out_dir: str = ".") -> dict:
         "clustering": clustering,
         "segmentation": segmentation,
         "similarity": sim_rec,
+        "tuning": tuning,
     }
     for mode, st in stages.items():
         for stage, us in st.items():
@@ -660,6 +735,23 @@ def bench_pipeline(smoke: bool = False, out_dir: str = ".") -> dict:
     assert sr["peak_reduction_x"] >= 8.0, (
         f"top-K similarity peak-buffer reduction "
         f"{sr['peak_reduction_x']:.1f}x is below the 8x target")
+    # Tuning gate.  Deterministic structural claims only: every stage
+    # winner survived bit-identity verification against its engine
+    # oracle, no winner is worse than the default plan on peak interface
+    # bytes (candidate 0 IS the default, so this can only fail if the
+    # sweep's ranking broke), and the merged tuned plan reproduces the
+    # default plan's labels end to end.  Wall-clock recorded, never
+    # asserted (same stance as every other gate).
+    for stage, st in tuning["stages"].items():
+        assert st["winner"]["verified"], (
+            f"tuning[{stage}]: unverified winner accepted")
+        assert (st["winner"]["peak_interface_bytes"]
+                <= st["default"]["peak_interface_bytes"]), (
+            f"tuning[{stage}]: winner peak interface bytes "
+            f"{st['winner']['peak_interface_bytes']} exceed the default "
+            f"plan's {st['default']['peak_interface_bytes']}")
+    assert tuning["e2e"]["label_identical"], (
+        "merged tuned plan diverged from the default plan's labels")
     return rec
 
 

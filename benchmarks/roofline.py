@@ -1,23 +1,31 @@
-"""Roofline analysis from the dry-run artifacts (§Roofline deliverable).
+"""Roofline analysis: place a compiled program on the TPU v5e roofline.
 
-Reads results/dryrun/*.json (written by repro.launch.dryrun), derives the
-three per-device roofline terms for TPU v5e:
+Two consumers share the same model:
 
-    compute    = FLOPs / 197e12          (bf16 MXU peak per chip)
+* :func:`roofline_position` — the reusable core: given loop-corrected
+  FLOPs, HBM bytes, and collective bytes (``repro.launch.hlo_analysis``
+  produces all three from a compiled module's text), return the three
+  per-device time terms and which resource dominates.  The tile-plan
+  autotuner (``repro.tune.autotune``) calls this per candidate geometry
+  so every stored plan records *why* it won — where each tiling sits on
+  the roofline, not just its wall-clock on the machine that tuned it.
+* :func:`run` — the dry-run report: reads results/dryrun/*.json (written
+  by ``repro.launch.dryrun``) and writes results/roofline.csv + .md,
+  adding the model-analytic floors (MODEL_FLOPS = 6*N*D train / 2*N*D
+  inference) whose ratio to HLO FLOPs exposes remat/replication waste.
+
+The machine constants are TPU v5e per chip:
+
+    compute    = FLOPs / 197e12          (bf16 MXU peak)
     memory     = HBM bytes / 819e9
     collective = collective bytes / 50e9 (per-ICI-link; 'pod'-axis traffic
                  crosses DCN and is slower — flagged, not re-priced)
 
 FLOPs / collective bytes are the *loop-corrected* values (scan bodies
-multiplied by trip counts — see repro.launch.hlo_analysis).  HBM bytes take
-XLA's 'bytes accessed' scaled by the same loop-correction ratio; the CPU
-dry-run materializes bf16 ops through f32 converts, so bytes are a ~2x
-UPPER bound on the TPU number (flagged per row, not silently rescaled).
-
-MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference), N = active params —
-the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/replication waste.
-
-Writes results/roofline.csv + results/roofline.md.
+multiplied by trip counts — see repro.launch.hlo_analysis).  HBM bytes
+prefer the fusion-aware estimate; the CPU dry-run materializes bf16 ops
+through f32 converts, so bytes are a ~2x UPPER bound on the TPU number
+(flagged per row, not silently rescaled).
 """
 from __future__ import annotations
 
@@ -29,6 +37,29 @@ from pathlib import Path
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 LINK_BW = 50e9
+
+
+def roofline_position(flops: float, hbm_bytes: float,
+                      coll_bytes: float = 0.0) -> dict:
+    """Place one program on the TPU v5e roofline.
+
+    Returns the three per-device time terms (``compute_s``, ``memory_s``,
+    ``collective_s``), the ``dominant`` resource, the arithmetic
+    ``intensity`` (FLOPs per HBM byte), and ``bound_s`` (the roofline
+    lower bound on runtime — the max of the three terms).  Inputs are the
+    loop-corrected totals from ``repro.launch.hlo_analysis.analyze_hlo``;
+    this is the per-candidate record the tile-plan autotuner stores.
+    """
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm_bytes / HBM_BW
+    t_x = coll_bytes / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": dom, "bound_s": max(t_c, t_m, t_x),
+        "intensity": flops / hbm_bytes if hbm_bytes > 0 else 0.0,
+    }
 
 ROOT = Path(__file__).resolve().parents[1]
 DRYRUN = ROOT / "results" / "dryrun"
@@ -119,15 +150,13 @@ def analyze(rec: dict) -> dict | None:
         mem_bytes = raw_bytes * scale
     coll = float(rec.get("collective_bytes", 0.0))
 
-    t_c = flops / PEAK_FLOPS
-    t_m = mem_bytes / HBM_BW
-    t_x = coll / LINK_BW
-    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
-              key=lambda kv: kv[1])[0]
+    pos = roofline_position(flops, mem_bytes, coll)
+    t_c, t_m, t_x = pos["compute_s"], pos["memory_s"], pos["collective_s"]
+    dom = pos["dominant"]
     mf = model_flops_per_device(rec)
     mb = model_min_bytes_per_device(rec)
     ratio = mf / flops if flops > 0 else 0.0
-    bound = max(t_c, t_m, t_x)
+    bound = pos["bound_s"]
     # achievable floor: the slower of ideal compute and ideal HBM time
     t_ideal = max(mf / PEAK_FLOPS, mb / HBM_BW)
     roofline_frac = t_ideal / bound if bound > 0 else 0.0

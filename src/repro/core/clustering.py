@@ -180,7 +180,7 @@ def cluster_sequential(sim: jnp.ndarray, table: SubtrajTable,
 
 def cluster_rounds(sim: jnp.ndarray, table: SubtrajTable, params: DSCParams,
                    *, max_rounds: int | None = None, use_kernel: bool = False,
-                   with_rounds: bool = False, moments=None):
+                   with_rounds: bool = False, moments=None, tiles=None):
     """Round-parallel Algorithm 4 — label-identical to the oracle.
 
     ``max_rounds=None`` runs a ``jax.lax.while_loop`` until every slot is
@@ -191,7 +191,10 @@ def cluster_rounds(sim: jnp.ndarray, table: SubtrajTable, params: DSCParams,
     sufficient and fewer cannot guarantee convergence, ``max_rounds < S``
     is rejected rather than silently returning partial labels.
     ``use_kernel=True`` runs the per-round scan and the final claim-max
-    through the fused Pallas tile kernels (``repro.kernels.cluster``).
+    through the fused Pallas tile kernels (``repro.kernels.cluster``);
+    ``tiles=(bu, bs)`` overrides their (row, column) tile geometry
+    (``EnginePlan.cluster_tiles`` — the autotuner's swept knob; labels
+    are bit-identical across geometries, only padding changes).
     ``with_rounds=True`` additionally returns the number of rounds
     executed (i32 scalar).
     """
@@ -210,14 +213,15 @@ def cluster_rounds(sim: jnp.ndarray, table: SubtrajTable, params: DSCParams,
         from repro.kernels import default_interpret
         from repro.kernels.cluster.ops import cluster_assign, cluster_round_scan
         interp = default_interpret()
+        bu, bs = tiles if tiles is not None else (8, 128)
 
         def scan(unresolved, is_rep):
             return cluster_round_scan(sim, rank, unresolved, is_rep, alpha,
-                                      interpret=interp)
+                                      bu=bu, bs=bs, interpret=interp)
 
         def assign(is_rep):
             return cluster_assign(sim, rank, is_rep, table.valid, alpha,
-                                  interpret=interp)
+                                  bu=bu, bs=bs, interpret=interp)
     else:
         # the alpha-edge predicate never changes across rounds: build it
         # once and reduce each round to two 0/1 vector-matrix products
@@ -343,14 +347,17 @@ def cluster_sequential_topk(topk: TopKSim, table: SubtrajTable,
 
 def cluster_rounds_topk(topk: TopKSim, table: SubtrajTable, params: DSCParams,
                         *, max_rounds: int | None = None,
-                        use_kernel: bool = False, with_rounds: bool = False):
+                        use_kernel: bool = False, with_rounds: bool = False,
+                        tiles=None):
     """Round-parallel Algorithm 4 over neighbor lists.
 
     Same DAG recurrence and claim-max as ``cluster_rounds``, but every
     per-round reduction runs over the ``[S, K]`` edge lists — O(S*K) work
     and memory per round.  ``use_kernel=True`` routes the scan and the
     claim-max through the Pallas list-tile kernels
-    (``repro.kernels.cluster``); label-identical either way.
+    (``repro.kernels.cluster``); label-identical either way.  The list
+    kernels tile rows only, so of ``tiles=(bu, bs)`` they consume ``bu``
+    as their row tile (default 8).
     """
     from repro.kernels.cluster.ref import (topk_claim_max_ref,
                                            topk_round_scan_ref)
@@ -370,16 +377,17 @@ def cluster_rounds_topk(topk: TopKSim, table: SubtrajTable, params: DSCParams,
         from repro.kernels.cluster.ops import (topk_cluster_assign,
                                                topk_cluster_round_scan)
         interp = default_interpret()
+        row_tile = tiles[0] if tiles is not None else 8
 
         def scan(unresolved, is_rep):
             return topk_cluster_round_scan(
                 topk.ids, topk.sims, rank, unresolved, is_rep, alpha,
-                interpret=interp)
+                bs=row_tile, interpret=interp)
 
         def assign(is_rep):
             return topk_cluster_assign(
                 topk.ids, topk.sims, rank, is_rep, table.valid, alpha,
-                interpret=interp)
+                bs=row_tile, interpret=interp)
     else:
         def scan(unresolved, is_rep):
             return topk_round_scan_ref(topk.ids, topk.sims, rank,
@@ -444,7 +452,8 @@ def rmse_from_result(result: ClusteringResult, eps_sp: float) -> jnp.ndarray:
 
 def cluster(sim, table: SubtrajTable, params: DSCParams,
             engine: str = "rounds", *, max_rounds: int | None = None,
-            use_kernel: bool = False, moments=None) -> ClusteringResult:
+            use_kernel: bool = False, moments=None,
+            tiles=None) -> ClusteringResult:
     """Problem 3 entry point: dispatch on representation and engine.
 
     ``sim`` is either the dense ``[S, S]`` matrix or a ``TopKSim``
@@ -454,7 +463,9 @@ def cluster(sim, table: SubtrajTable, params: DSCParams,
     ``member_sim`` / ``is_rep`` / ``is_outlier`` (for top-K: whenever the
     overflow certificate is zero).  ``moments`` overrides the dense
     threshold statistics (distributed column-block psum); the top-K
-    structure carries its own.
+    structure carries its own.  ``tiles=(bu, bs)`` pins the Pallas round
+    kernels' tile geometry (``EnginePlan.cluster_tiles``; ignored by the
+    jnp engines and the sequential oracle).
     """
     if isinstance(sim, TopKSim):
         if engine == "sequential":
@@ -462,18 +473,19 @@ def cluster(sim, table: SubtrajTable, params: DSCParams,
         if engine == "rounds":
             return cluster_rounds_topk(sim, table, params,
                                        max_rounds=max_rounds,
-                                       use_kernel=use_kernel)
+                                       use_kernel=use_kernel, tiles=tiles)
         raise ValueError(f"unknown cluster engine {engine!r}")
     if engine == "sequential":
         return cluster_sequential(sim, table, params, moments=moments)
     if engine == "rounds":
         return cluster_rounds(sim, table, params, max_rounds=max_rounds,
-                              use_kernel=use_kernel, moments=moments)
+                              use_kernel=use_kernel, moments=moments,
+                              tiles=tiles)
     raise ValueError(f"unknown cluster engine {engine!r}")
 
 
 cluster_jit = jax.jit(
-    cluster, static_argnames=("engine", "max_rounds", "use_kernel"))
+    cluster, static_argnames=("engine", "max_rounds", "use_kernel", "tiles"))
 
 
 def sscr(result: ClusteringResult, sim: jnp.ndarray) -> jnp.ndarray:

@@ -42,6 +42,7 @@ from repro.core import segmentation as seg_mod
 from repro.core.clustering import cluster
 from repro.core.geometry import filter_delta_t
 from repro.core.partitioning import PartitionedBatch
+from repro.core.plan import EnginePlan, resolve_plan
 from repro.core.refine import refine_states
 from repro.core.similarity import (build_subtraj_table_arrays, finalize_sim,
                                    finalize_sim_cols, largest_divisor,
@@ -83,31 +84,34 @@ def run_dsc_distributed(
     *,
     part_axis: str = "part",
     model_axis: str = "model",
-    use_kernel: bool = False,
+    plan: EnginePlan | None = None,
     **kw,
 ) -> DistributedDSCOutput:
     """Compile & run the full distributed pipeline on ``mesh``.
 
-    Forwards ``use_index=True`` (see ``build_dsc_program``) to prune the
-    JOIN phase with the spatiotemporal index.  Under ``sim_mode="topk"``
-    the per-partition exactness certificate is checked on the host: a
-    nonzero overflow count raises (the fully-jitted program cannot widen
-    K in-graph the way ``run_dsc`` retries; rerun with a larger
-    ``sim_topk``).
+    ``plan=`` takes one :class:`EnginePlan`; the remaining keyword
+    arguments are the deprecated per-stage aliases (``use_kernel``,
+    ``use_index``, ``mode``, ``sim_mode``, ... — see
+    ``build_dsc_program``) that materialize a plan when none is given.
+    Under ``sim_mode="topk"`` the per-partition exactness certificate is
+    checked on the host: a nonzero overflow count raises (the
+    fully-jitted program cannot widen K in-graph the way ``run_dsc``
+    retries; rerun with a larger ``sim_topk``).
     """
+    plan = resolve_plan(plan, **kw)
     fn = build_dsc_program(parts, params, mesh, part_axis=part_axis,
-                           model_axis=model_axis, use_kernel=use_kernel,
-                           **kw)
+                           model_axis=model_axis, plan=plan)
     final, table, vote, active, diag = jax.jit(fn)(
         parts.x, parts.y, parts.t, parts.valid, parts.traj_id, parts.ranges)
     out = DistributedDSCOutput(
         result=final, table=table, vote=vote, active=active, sim_diag=diag)
-    if kw.get("sim_mode", "dense") == "topk":
+    if plan.sim_mode == "topk":
         import numpy as np
         overflow = int(np.asarray(diag)[:, 3].sum())
         if overflow:
+            k = plan.sim_topk if plan.sim_topk is not None else 32
             raise RuntimeError(
-                f"sim_topk={kw.get('sim_topk', 32)} truncated potential "
+                f"sim_topk={k} truncated potential "
                 f"alpha-edges on {overflow} rows across partitions "
                 "(spill >= alpha): labels would not be exact.  Rerun "
                 "with a larger sim_topk.")
@@ -130,6 +134,7 @@ def build_dsc_program(
     *,
     part_axis: str = "part",
     model_axis: str = "model",
+    plan: EnginePlan | None = None,  # the one tuned surface (DESIGN.md §9)
     use_kernel: bool = False,
     use_index: bool = False,
     mode: str = "materialize",      # "materialize" | "fused"
@@ -139,9 +144,14 @@ def build_dsc_program(
     cluster_use_kernel: bool = False,  # Pallas tile kernels for phase 5
     seg_use_kernel: bool = False,    # Pallas TSA2 Jaccard kernel, phase 3
     sim_mode: str = "dense",        # "dense" | "topk" SP representation
-    sim_topk: int = 32,             # K of the top-K neighbor lists
+    sim_topk: int | None = None,    # K of the top-K neighbor lists (32)
 ):
     """Build the shard_map program (not yet jitted) for ``parts`` shapes.
+
+    ``plan=`` carries every per-stage choice as one :class:`EnginePlan`;
+    the per-stage keywords below are **deprecated aliases** that
+    materialize a plan (``repro.core.plan.resolve_plan``) — passing both
+    a plan and a non-default alias raises.
 
     ``mode="fused"`` streams the JOIN phase per halo slab: instead of
     building the per-rank ``[T, Mp, Tc]`` join cube and re-reading it for
@@ -200,12 +210,23 @@ def build_dsc_program(
     moments psum per-rank row partials in both modes, so dense and topk
     resolve bit-identical alpha.  ``sim_strategy`` / ``sim_dtype`` only
     shape the dense collective and are ignored under topk."""
-    if mode not in ("materialize", "fused"):
-        raise ValueError(f"unknown mode {mode!r}")
-    if cluster_engine not in ("rounds", "sequential"):
-        raise ValueError(f"unknown cluster engine {cluster_engine!r}")
-    if sim_mode not in ("dense", "topk"):
-        raise ValueError(f"unknown sim_mode {sim_mode!r}")
+    plan = resolve_plan(plan, use_kernel=use_kernel, use_index=use_index,
+                        mode=mode, sim_strategy=sim_strategy,
+                        sim_dtype=sim_dtype, cluster_engine=cluster_engine,
+                        cluster_use_kernel=cluster_use_kernel,
+                        seg_use_kernel=seg_use_kernel, sim_mode=sim_mode,
+                        sim_topk=sim_topk)
+    mode, use_kernel, use_index = plan.mode, plan.use_kernel, plan.use_index
+    sim_strategy, sim_dtype = plan.sim_strategy, plan.sim_dtype
+    cluster_engine = plan.cluster_engine
+    cluster_use_kernel = plan.cluster_use_kernel
+    seg_use_kernel = plan.seg_use_kernel
+    sim_mode = plan.sim_mode
+    sim_topk = plan.sim_topk if plan.sim_topk is not None else 32
+    # fused tile-geometry overrides for the streaming sweeps (None = the
+    # kernels' own defaults — identical traces to the pre-plan surface)
+    tile_kw = ({} if plan.fused_tiles is None else
+               dict(zip(("rows", "bc", "bm"), plan.fused_tiles)))
     nP = mesh.shape[part_axis]
     nM = mesh.shape[model_axis]
     Pn, T, Mp = parts.x.shape
@@ -283,7 +304,7 @@ def build_dsc_program(
                 px, py, pt, pv, traj_id,
                 sl(cx), sl(cy), sl(ct), sl(cv), cid,
                 params.eps_sp, params.eps_t, params.delta_t,
-                with_masks=params.segmentation == "tsa2")
+                with_masks=params.segmentation == "tsa2", **tile_kw)
             vote = lax.psum(vote_l, model_axis)            # [T, Mp]
             if params.segmentation == "tsa2":
                 allw = lax.all_gather(words_l, model_axis)  # [nM, T, Mp, Wl]
@@ -431,7 +452,8 @@ def build_dsc_program(
                 return stjoin_sim_fused_arrays(
                     px, py, pt, pv, traj_id, gid_own,
                     sl(cx), sl(cy), sl(ct), sl(cv), cid, gidc_l,
-                    S, S_loc, params.eps_sp, params.eps_t, params.delta_t)
+                    S, S_loc, params.eps_sp, params.eps_t, params.delta_t,
+                    **tile_kw)
             dst_l = jnp.where(dst < S, dst - c0s, S_loc)
             raw = jnp.zeros((S + 1, S_loc + 1), jnp.float32)
             raw = raw.at[src.reshape(-1), dst_l.reshape(-1)].add(
@@ -477,7 +499,8 @@ def build_dsc_program(
 
             # ---------- phase 5: per-partition clustering (lists) -------
             res_l = cluster(topk, part_table, params, engine=cluster_engine,
-                            use_kernel=cluster_use_kernel)
+                            use_kernel=cluster_use_kernel,
+                            tiles=plan.cluster_tiles)
             overflow = topk_overflow(topk, res_l.alpha_used)
             meansim = jnp.sum(rsum) / jnp.maximum(jnp.sum(cnt), 1)
         else:
@@ -495,7 +518,8 @@ def build_dsc_program(
                     raw = stjoin_sim_fused_arrays(
                         px, py, pt, pv, traj_id, gid_own,
                         sl(cx), sl(cy), sl(ct), sl(cv), cid, gid_cand,
-                        S, S, params.eps_sp, params.eps_t, params.delta_t)
+                        S, S, params.eps_sp, params.eps_t, params.delta_t,
+                        **tile_kw)
                 else:
                     raw = jnp.zeros((S + 1, S + 1), jnp.float32)
                     raw = raw.at[src.reshape(-1), dst.reshape(-1)].add(
@@ -515,7 +539,8 @@ def build_dsc_program(
 
             # ------------- phase 5: per-partition clustering ------------
             res_l = cluster(sim, part_table, params, engine=cluster_engine,
-                            use_kernel=cluster_use_kernel, moments=moments)
+                            use_kernel=cluster_use_kernel, moments=moments,
+                            tiles=plan.cluster_tiles)
             overflow = jnp.zeros((), jnp.int32)
             pos = sim > 0
             meansim = jnp.sum(jnp.where(pos, sim, 0.0)) / jnp.maximum(

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from repro.core import geometry, segmentation, similarity, voting
 from repro.core.clustering import (cluster, rmse, rmse_from_result, sscr,
                                    sscr_from_result)
+from repro.core.plan import EnginePlan, resolve_plan
 from repro.core.types import (ClusteringResult, DSCParams, JoinResult,
                               SubtrajSegmentation, SubtrajTable, TopKSim,
                               TrajectoryBatch)
@@ -52,12 +53,13 @@ class DSCOutput:
     rmse: jnp.ndarray               # Sec. 6.2 quality metric
 
 
-def _finish(batch, params, join, vote, masks, tile_ids=None,
-            fused_tiles=None, cluster_engine="rounds",
-            cluster_use_kernel=False, seg_use_kernel=False,
-            sim_mode="dense", sim_topk=32,
-            sim_panel=None) -> DSCOutput:
-    """Segmentation onward — shared by every join/vote front-end."""
+def _finish(batch, params, join, vote, masks, plan: EnginePlan,
+            tile_ids=None) -> DSCOutput:
+    """Segmentation onward — shared by every join/vote front-end.
+
+    ``plan`` is a resolved :class:`EnginePlan` with a concrete ``sim_topk``
+    (the dispatcher clamps K to S before tracing).
+    """
     nvote = voting.normalized_voting(vote, batch.valid)
     if params.segmentation == "tsa1":
         seg = segmentation.tsa1(nvote, batch.valid, params.w, params.tau,
@@ -65,32 +67,34 @@ def _finish(batch, params, join, vote, masks, tile_ids=None,
     else:
         seg = segmentation.tsa2(masks, batch.valid, params.w, params.tau,
                                 params.max_subtrajs_per_traj,
-                                use_kernel=seg_use_kernel)
+                                use_kernel=plan.seg_use_kernel)
 
     table = similarity.build_subtraj_table(
         batch, seg, vote, params.max_subtrajs_per_traj)
 
-    if sim_mode == "topk":
+    if plan.sim_mode == "topk":
         # sparse SP relation: panel-streamed top-K lists, never [S, S]
         if join is None:
             from repro.kernels.stjoin import ops as stjoin_ops
-            Sb = similarity.plan_panel(table.num_slots, sim_panel)
+            Sb = similarity.plan_panel(table.num_slots, plan.sim_panel)
 
             def panel_raw(p0):
                 return stjoin_ops.stjoin_sim_panel_fused(
                     batch, batch, seg.sub_local, seg.sub_local,
                     params.max_subtrajs_per_traj, params.eps_sp,
                     params.eps_t, params.delta_t, p0=p0, panel=Sb,
-                    tile_ids=tile_ids, **_tile_kwargs(fused_tiles))
+                    tile_ids=tile_ids, **_tile_kwargs(plan.fused_tiles))
 
-            topk = similarity.topk_stream(panel_raw, table, k=sim_topk,
+            topk = similarity.topk_stream(panel_raw, table, k=plan.sim_topk,
                                           panel=Sb)
         else:
             topk = similarity.similarity_topk(
                 join, seg, seg.sub_local, table,
-                params.max_subtrajs_per_traj, k=sim_topk, panel=sim_panel)
-        result = cluster(topk, table, params, engine=cluster_engine,
-                         use_kernel=cluster_use_kernel)
+                params.max_subtrajs_per_traj, k=plan.sim_topk,
+                panel=plan.sim_panel)
+        result = cluster(topk, table, params, engine=plan.cluster_engine,
+                         use_kernel=plan.cluster_use_kernel,
+                         tiles=plan.cluster_tiles)
         overflow = similarity.topk_overflow(topk, result.alpha_used)
         return DSCOutput(join=join, vote=vote, seg=seg, table=table,
                          sim=None, sim_topk=topk, sim_overflow=overflow,
@@ -103,70 +107,47 @@ def _finish(batch, params, join, vote, masks, tile_ids=None,
             batch, batch, seg.sub_local, seg.sub_local,
             params.max_subtrajs_per_traj, params.eps_sp, params.eps_t,
             params.delta_t, tile_ids=tile_ids,
-            **_tile_kwargs(fused_tiles))
+            **_tile_kwargs(plan.fused_tiles))
         sim = similarity.finalize_sim(raw, table)
     else:
         sim = similarity.similarity_matrix(
             join, seg, seg.sub_local, table, params.max_subtrajs_per_traj)
 
-    result = cluster(sim, table, params, engine=cluster_engine,
-                     use_kernel=cluster_use_kernel)
+    result = cluster(sim, table, params, engine=plan.cluster_engine,
+                     use_kernel=plan.cluster_use_kernel,
+                     tiles=plan.cluster_tiles)
     return DSCOutput(join=join, vote=vote, seg=seg, table=table, sim=sim,
                      sim_topk=None, sim_overflow=None,
                      result=result, sscr=sscr(result, sim),
                      rmse=rmse(result, sim, params.eps_sp))
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel", "use_index",
-                                             "cluster_engine",
-                                             "cluster_use_kernel",
-                                             "seg_use_kernel", "sim_mode",
-                                             "sim_topk", "sim_panel"))
+@functools.partial(jax.jit, static_argnames=("plan",))
 def _run_dsc_materialize(batch: TrajectoryBatch, params: DSCParams,
-                         use_kernel: bool, use_index: bool,
-                         cluster_engine: str,
-                         cluster_use_kernel: bool,
-                         seg_use_kernel: bool,
-                         sim_mode: str = "dense", sim_topk: int = 32,
-                         sim_panel: int | None = None) -> DSCOutput:
-    if use_kernel:
+                         plan: EnginePlan) -> DSCOutput:
+    if plan.use_kernel:
         from repro.kernels.stjoin import ops as stjoin_ops
         join = stjoin_ops.subtrajectory_join(
             batch, batch, params.eps_sp, params.eps_t, params.delta_t)
     else:
         join = geometry.subtrajectory_join(
             batch, batch, params.eps_sp, params.eps_t, params.delta_t,
-            use_index=use_index)
+            use_index=plan.use_index)
     vote = voting.point_voting(join)
     masks = (voting.neighbor_mask_packed(join)
              if params.segmentation == "tsa2" else None)
-    return _finish(batch, params, join, vote, masks,
-                   cluster_engine=cluster_engine,
-                   cluster_use_kernel=cluster_use_kernel,
-                   seg_use_kernel=seg_use_kernel, sim_mode=sim_mode,
-                   sim_topk=sim_topk, sim_panel=sim_panel)
+    return _finish(batch, params, join, vote, masks, plan)
 
 
-@functools.partial(jax.jit, static_argnames=("cluster_engine",
-                                             "cluster_use_kernel",
-                                             "seg_use_kernel", "sim_mode",
-                                             "sim_topk", "sim_panel"))
+@functools.partial(jax.jit, static_argnames=("plan",))
 def _run_dsc_from_join(batch: TrajectoryBatch, params: DSCParams,
-                       join: JoinResult, cluster_engine: str = "rounds",
-                       cluster_use_kernel: bool = False,
-                       seg_use_kernel: bool = False,
-                       sim_mode: str = "dense", sim_topk: int = 32,
-                       sim_panel: int | None = None) -> DSCOutput:
+                       join: JoinResult, plan: EnginePlan) -> DSCOutput:
     """Materializing tail for a join produced outside the jit boundary
     (the host-planned index-pruned Pallas join)."""
     vote = voting.point_voting(join)
     masks = (voting.neighbor_mask_packed(join)
              if params.segmentation == "tsa2" else None)
-    return _finish(batch, params, join, vote, masks,
-                   cluster_engine=cluster_engine,
-                   cluster_use_kernel=cluster_use_kernel,
-                   seg_use_kernel=seg_use_kernel, sim_mode=sim_mode,
-                   sim_topk=sim_topk, sim_panel=sim_panel)
+    return _finish(batch, params, join, vote, masks, plan)
 
 
 def _tile_kwargs(fused_tiles):
@@ -177,30 +158,43 @@ def _tile_kwargs(fused_tiles):
     return dict(rows=rows, bc=bc, bm=bm)
 
 
-@functools.partial(jax.jit, static_argnames=("fused_tiles",
-                                             "cluster_engine",
-                                             "cluster_use_kernel",
-                                             "seg_use_kernel", "sim_mode",
-                                             "sim_topk", "sim_panel"))
+@functools.partial(jax.jit, static_argnames=("plan",))
 def _run_dsc_fused(batch: TrajectoryBatch, params: DSCParams,
-                   tile_ids=None, fused_tiles=None,
-                   cluster_engine: str = "rounds",
-                   cluster_use_kernel: bool = False,
-                   seg_use_kernel: bool = False,
-                   sim_mode: str = "dense", sim_topk: int = 32,
-                   sim_panel: int | None = None) -> DSCOutput:
+                   tile_ids, plan: EnginePlan) -> DSCOutput:
     from repro.kernels.stjoin import ops as stjoin_ops
     vote, masks = stjoin_ops.stjoin_vote_fused_arrays(
         batch.x, batch.y, batch.t, batch.valid, batch.traj_id,
         batch.x, batch.y, batch.t, batch.valid, batch.traj_id,
         params.eps_sp, params.eps_t, params.delta_t, tile_ids=tile_ids,
         with_masks=params.segmentation == "tsa2",
-        **_tile_kwargs(fused_tiles))
-    return _finish(batch, params, None, vote, masks, tile_ids=tile_ids,
-                   fused_tiles=fused_tiles, cluster_engine=cluster_engine,
-                   cluster_use_kernel=cluster_use_kernel,
-                   seg_use_kernel=seg_use_kernel, sim_mode=sim_mode,
-                   sim_topk=sim_topk, sim_panel=sim_panel)
+        **_tile_kwargs(plan.fused_tiles))
+    return _finish(batch, params, None, vote, masks, plan,
+                   tile_ids=tile_ids)
+
+
+def run_dsc_lowerable(batch: TrajectoryBatch, params: DSCParams,
+                      plan: EnginePlan) -> DSCOutput:
+    """Trace-friendly single-host pipeline: one plan, one trace.
+
+    The host-level conveniences of :func:`run_dsc` — grid-index planning
+    (concrete inputs) and the top-K overflow retry loop (concrete
+    ``sim_overflow``) — don't trace, so this entry point skips both: it
+    requires ``use_index=False`` and returns the overflow certificate
+    instead of retrying.  This is the surface the autotuner
+    (``repro.tune.autotune``) lowers, compiles, and times per candidate
+    plan, and what anything embedding the pipeline inside a larger jit
+    should call.
+    """
+    plan = resolve_plan(plan)
+    if plan.use_index:
+        raise ValueError("run_dsc_lowerable requires use_index=False "
+                         "(index planning is host-driven); use run_dsc")
+    S = batch.num_trajs * params.max_subtrajs_per_traj
+    k = min(plan.sim_topk if plan.sim_topk is not None else 32, S)
+    plan = plan.replace(sim_topk=k)
+    if plan.mode == "fused":
+        return _run_dsc_fused(batch, params, None, plan)
+    return _run_dsc_materialize(batch, params, plan)
 
 
 def run_dsc(batch: TrajectoryBatch, params: DSCParams,
@@ -213,8 +207,15 @@ def run_dsc(batch: TrajectoryBatch, params: DSCParams,
             sim_mode: str = "dense",
             sim_topk: int | None = None,
             sim_panel: int | None = None,
-            sim_topk_retry: bool = True) -> DSCOutput:
+            sim_topk_retry: bool = True,
+            plan: EnginePlan | None = None) -> DSCOutput:
     """Run the full DSC pipeline on one host / one partition.
+
+    ``plan=`` is the configuration surface: one :class:`EnginePlan`
+    holding every per-stage engine and tile choice (DESIGN.md §9).  The
+    per-stage keyword flags below are **deprecated aliases** that
+    materialize a plan via :func:`repro.core.plan.resolve_plan`; passing
+    both a plan and a non-default flag raises.
 
     ``mode="fused"`` streams the join (no ``[T, M, C]`` cube;
     ``out.join is None``); ``mode="materialize"`` is the parity oracle.
@@ -246,52 +247,44 @@ def run_dsc(batch: TrajectoryBatch, params: DSCParams,
     the streaming panel height Sb (default 128, snapped to a divisor of
     S).  ``out.sim`` is None in this mode (use ``out.sim_topk``).
     """
-    if mode not in ("materialize", "fused"):
-        raise ValueError(f"unknown mode {mode!r}")
-    if cluster_engine not in ("rounds", "sequential"):
-        raise ValueError(f"unknown cluster engine {cluster_engine!r}")
-    if sim_mode not in ("dense", "topk"):
-        raise ValueError(f"unknown sim_mode {sim_mode!r}")
+    plan = resolve_plan(plan, mode=mode, use_kernel=use_kernel,
+                        use_index=use_index, fused_tiles=fused_tiles,
+                        cluster_engine=cluster_engine,
+                        cluster_use_kernel=cluster_use_kernel,
+                        seg_use_kernel=seg_use_kernel, sim_mode=sim_mode,
+                        sim_topk=sim_topk, sim_panel=sim_panel)
 
     S = batch.num_trajs * params.max_subtrajs_per_traj
-    k = min(sim_topk if sim_topk is not None else 32, S)
+    k = min(plan.sim_topk if plan.sim_topk is not None else 32, S)
 
     def dispatch(k):
-        sim_kw = dict(sim_mode=sim_mode, sim_topk=k, sim_panel=sim_panel)
-        if mode == "fused":
+        p = plan.replace(sim_topk=k)
+        if p.mode == "fused":
             tile_ids = None
-            tiles = fused_tiles
-            if use_index:
+            if p.use_index:
                 from repro.kernels.stjoin import ops as stjoin_ops
-                plan = stjoin_ops.plan_fused_tiles(
+                tp = stjoin_ops.plan_fused_tiles(
                     batch.x, batch.y, batch.t, batch.valid,
                     batch.x, batch.y, batch.t, batch.valid,
-                    params.eps_sp, params.eps_t, **_tile_kwargs(tiles))
-                # bind the plan's resolved geometry so both passes sweep
-                # the exact tiling the ids were built for
-                tile_ids = plan.tile_ids
-                tiles = (plan.rows, plan.bc, plan.bm)
-            return _run_dsc_fused(batch, params, tile_ids, tiles,
-                                  cluster_engine=cluster_engine,
-                                  cluster_use_kernel=cluster_use_kernel,
-                                  seg_use_kernel=seg_use_kernel, **sim_kw)
-        if use_index and use_kernel:
+                    params.eps_sp, params.eps_t,
+                    **_tile_kwargs(p.fused_tiles))
+                # bind the tile plan's resolved geometry so both passes
+                # sweep the exact tiling the ids were built for
+                tile_ids = tp.tile_ids
+                p = p.replace(fused_rows=tp.rows, fused_bc=tp.bc,
+                              fused_bm=tp.bm)
+            return _run_dsc_fused(batch, params, tile_ids, p)
+        if p.use_index and p.use_kernel:
             # grid-pruned Pallas join: host-side planning pass, then
             # jitted tail
             from repro.kernels.stjoin import ops as stjoin_ops
             join = stjoin_ops.subtrajectory_join(
                 batch, batch, params.eps_sp, params.eps_t, params.delta_t,
                 use_index=True)
-            return _run_dsc_from_join(batch, params, join,
-                                      cluster_engine=cluster_engine,
-                                      cluster_use_kernel=cluster_use_kernel,
-                                      seg_use_kernel=seg_use_kernel,
-                                      **sim_kw)
-        return _run_dsc_materialize(batch, params, use_kernel, use_index,
-                                    cluster_engine, cluster_use_kernel,
-                                    seg_use_kernel, **sim_kw)
+            return _run_dsc_from_join(batch, params, join, p)
+        return _run_dsc_materialize(batch, params, p)
 
-    if sim_mode == "dense":
+    if plan.sim_mode == "dense":
         return dispatch(k)
     while True:
         out = dispatch(k)

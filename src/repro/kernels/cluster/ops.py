@@ -21,7 +21,14 @@ def plan_tiles(S: int, target_bu: int = 8, target_bs: int = 128):
     """(bu, bs, S_padded): row/column tile sizes and the padded slot count.
 
     Mirrors the stjoin convention (f32 (8, 128) register tiles); ``S`` is
-    padded up to a common multiple so both tilings divide it.
+    padded up to a common multiple so both tilings divide it.  The targets
+    are taken verbatim (padding absorbs any S), so ``(target_bu,
+    target_bs)`` IS the resolved geometry — ``EnginePlan.cluster_tiles``
+    threads the pair here unchanged, and the autotuner
+    (``repro.tune.autotune.tune_cluster_tiles``) sweeps it against the
+    jnp oracle: any tile pair is bit-identical by the padding invariant
+    (padded slots join no reduction), so tiles only move the
+    VMEM-residency/grid-overhead trade-off, never the labels.
     """
     bu, bs = target_bu, target_bs
     q = math.lcm(bu, bs)

@@ -22,7 +22,15 @@ from repro.kernels.jaccard.jaccard import jaccard_pallas
 @functools.partial(jax.jit, static_argnames=("w", "interpret"))
 def window_jaccard(masks: jnp.ndarray, valid: jnp.ndarray, *, w: int,
                    interpret: bool | None = None) -> jnp.ndarray:
-    """TSA2's d[] signal from packed neighbor masks ([T, M, W], [T, M])."""
+    """TSA2's d[] signal from packed neighbor masks ([T, M, W], [T, M]).
+
+    ``d[t, i]`` is the windowed Jaccard *distance* between the union of
+    the ``w`` neighbor sets before point ``i`` and the ``w`` sets from
+    ``i`` on (Problem 2's change signal); peaks in ``d`` become TSA2 cut
+    candidates.  This is the engine ``EnginePlan.seg_use_kernel`` selects
+    — bit-identical to the jnp packed path, so the choice is purely a
+    substrate decision (Pallas on accelerators, interpret mode on CPU).
+    """
     if interpret is None:
         interpret = default_interpret()
     masks = jnp.where(valid[..., None], masks, jnp.uint32(0))

@@ -13,7 +13,13 @@ from repro.kernels.lcss.lcss import lcss_pallas, shear_weights
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def lcss_scores(rx, ry, rt, rv, sx, sy, st, sv, eps_sp, eps_t,
                 *, interpret: bool | None = None) -> jnp.ndarray:
-    """[B, 2] raw DP scores (weighted Eq. 2 numerator, classical count)."""
+    """[B, 2] raw DP scores (weighted Eq. 2 numerator, classical count).
+
+    One batched sheared-wavefront DP per (reference, candidate) pair:
+    ``shear_weights`` precomputes the [B, N, M] match/weight planes, the
+    Pallas kernel sweeps the anti-diagonals.  Scores are clamped at zero
+    (an all-invalid pair yields an empty DP, not a negative score).
+    """
     if interpret is None:
         interpret = default_interpret()
     ws = shear_weights(rx, ry, rt, rv, sx, sy, st, sv, eps_sp, eps_t)
@@ -24,7 +30,13 @@ def lcss_scores(rx, ry, rt, rv, sx, sy, st, sv, eps_sp, eps_t,
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def lcss_similarity(rx, ry, rt, rv, sx, sy, st, sv, eps_sp, eps_t,
                     *, interpret: bool | None = None) -> jnp.ndarray:
-    """Eq. 1 (channel 1) and Eq. 2 (channel 0) similarities, [B, 2]."""
+    """Eq. 1 (channel 1) and Eq. 2 (channel 0) similarities, [B, 2].
+
+    The raw DP scores normalized by ``min(|r|, |s|)`` valid points — the
+    paper's LCSS similarity in both its classical (count) and
+    voting-weighted forms.  Used by the evaluation harness as the
+    continuous-curve similarity reference.
+    """
     scores = lcss_scores(rx, ry, rt, rv, sx, sy, st, sv, eps_sp, eps_t,
                          interpret=interpret)
     n = jnp.sum(rv, axis=1)

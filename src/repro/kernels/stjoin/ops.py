@@ -261,6 +261,17 @@ def plan_fused_tiles(rx, ry, rt, rvalid, cx, cy, ct, cvalid, eps_sp, eps_t,
     plus the resolved geometry) ready for the ``*_pruned`` fused entry
     points, which reject a plan whose geometry differs from their own.
     Raises if ``max_tiles`` would drop a survivor.
+
+    Geometry knobs (``rows``, ``bc``, ``bm``) are the fused tile plan of
+    ``EnginePlan.fused_tiles`` (DESIGN.md §9): ``rows`` reference-trajectory
+    rows per block (``None`` = the fat-tile default ``max(1, 2048 // M)``),
+    ``bc`` candidate trajectories per block, ``bm`` candidate points per
+    chunk.  Pruning quality depends on them — smaller blocks give the grid
+    tighter boxes to reject, larger blocks amortize sweep overhead — which
+    is why the dispatcher re-binds the *resolved* geometry into the plan
+    before tracing: the sweep must run the exact tiling the tile ids were
+    built for.  The autotuner (``repro.tune.autotune.tune_join``) sweeps
+    this lattice rather than guessing.
     """
     M = rx.shape[1]
     rows, bc, bm, mc_pad = _fused_geometry(

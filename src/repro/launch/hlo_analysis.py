@@ -20,6 +20,18 @@ Accounted per instruction:
 
 Elementwise/reduction FLOPs are ignored — matmuls dominate all ten
 architectures by >100x.  Validated against analytic 6ND in tests.
+
+Two consumer groups share this parser:
+
+* the roofline report (``benchmarks/roofline.py``) feeds
+  :func:`analyze_hlo`'s loop-corrected totals into
+  ``roofline_position`` to place a program on the TPU v5e roofline;
+* the DSC structural gates and the tile-plan autotuner
+  (``benchmarks/kernel_bench.py``, ``repro.tune.autotune``) use the
+  buffer-assignment helpers — :func:`buffer_inventory`,
+  :func:`peak_buffer_stats`, :func:`find_buffers_with_elements` (the
+  join-cube fingerprint), and :func:`interface_buffer_stats` (the
+  cross-stage HBM footprint, the tuner's primary ranking key).
 """
 from __future__ import annotations
 

@@ -1,0 +1,5 @@
+"""Tile-plan autotuning for the DSC engines (see ``repro.tune.autotune``)."""
+from repro.tune.autotune import (CandidateRecord, PlanStore,  # noqa: F401
+                                 TuneResult, plan_cache_key, shape_bucket,
+                                 sweep, tune_cluster_tiles, tune_join,
+                                 tune_pipeline, tune_sim_panel)

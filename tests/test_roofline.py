@@ -1,0 +1,51 @@
+"""Roofline position: the reusable core the autotuner records per plan."""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS,  # noqa: E402
+                                 roofline_position)
+from repro.launch.hlo_analysis import analyze_hlo  # noqa: E402
+
+
+def test_roofline_position_fields_and_dominant():
+    pos = roofline_position(flops=197e12, hbm_bytes=0.0)
+    assert pos["compute_s"] == 1.0 and pos["dominant"] == "compute"
+    assert pos["bound_s"] == 1.0 and pos["intensity"] == 0.0
+
+    pos = roofline_position(flops=0.0, hbm_bytes=819e9)
+    assert pos["memory_s"] == 1.0 and pos["dominant"] == "memory"
+
+    pos = roofline_position(flops=1.0, hbm_bytes=1.0, coll_bytes=50e9)
+    assert pos["collective_s"] == 1.0 and pos["dominant"] == "collective"
+
+
+def test_roofline_position_consistent_with_constants():
+    flops, hbm, coll = 2e12, 8e9, 1e9
+    pos = roofline_position(flops, hbm, coll)
+    assert pos["compute_s"] == flops / PEAK_FLOPS
+    assert pos["memory_s"] == hbm / HBM_BW
+    assert pos["collective_s"] == coll / LINK_BW
+    assert pos["bound_s"] == max(pos["compute_s"], pos["memory_s"],
+                                 pos["collective_s"])
+    assert pos["intensity"] == flops / hbm
+
+
+def test_roofline_from_analyzed_hlo_bench_shape():
+    # the autotuner's exact path: compiled HLO -> analyze_hlo ->
+    # roofline_position, at a small matmul whose FLOPs are known
+    n = 128
+    a = jnp.zeros((n, n), jnp.float32)
+    hlo = jax.jit(lambda x: x @ x).lower(a).compile().as_text()
+    res = analyze_hlo(hlo)
+    assert res["flops"] == 2.0 * n * n * n
+    pos = roofline_position(res["flops"],
+                            res["hbm_traffic_fused_bytes"]
+                            or res["hbm_traffic_bytes"],
+                            res["collective_bytes"])
+    assert pos["bound_s"] > 0
+    assert pos["dominant"] in ("compute", "memory")
