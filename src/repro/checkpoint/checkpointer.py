@@ -11,7 +11,7 @@ Guarantees
 * **Atomicity**: a checkpoint directory appears only via rename(2); readers
   never observe partial state.  A crashed writer leaves only ``.tmp-*``
   litter that the next writer garbage-collects.
-* **Integrity**:每 leaf carries a CRC32; restore verifies before use.
+* **Integrity**: every leaf carries a CRC32; restore verifies before use.
 * **Elasticity**: leaves are stored as *global* arrays (gathered on save);
   ``load_checkpoint(..., shardings=...)`` re-shards onto ANY mesh shape, so
   restarts may change (pod, data, model) freely.  (At 1000+-node scale the
@@ -92,6 +92,16 @@ def latest_step(root: str | Path) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def _verified_leaf(d: Path, e: dict, step: int, verify: bool) -> np.ndarray:
+    arr = np.load(d / e["file"])
+    if verify:
+        crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+        if crc != e["crc32"]:
+            raise IOError(
+                f"checksum mismatch for {e['path']} at step {step}")
+    return arr
+
+
 def load_checkpoint(root: str | Path, tree_like: Any,
                     step: Optional[int] = None, *, shardings: Any = None,
                     verify: bool = True) -> tuple[Any, int]:
@@ -114,19 +124,43 @@ def load_checkpoint(root: str | Path, tree_like: Any,
     out = []
     for path, ref, sh in zip(paths, leaves, sh_leaves):
         e = by_path[path]
-        arr = np.load(d / e["file"])
-        if verify:
-            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
-            if crc != e["crc32"]:
-                raise IOError(f"checksum mismatch for {path} at step {step}")
+        arr = _verified_leaf(d, e, step, verify)
         if tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(
                 f"shape mismatch {path}: ckpt {arr.shape} vs {ref.shape}")
+        if str(arr.dtype) != str(np.dtype(ref.dtype)):
+            # a wrong-dtype leaf would otherwise restore silently (same
+            # shape, different bits) and corrupt downstream bitwise parity
+            raise ValueError(
+                f"dtype mismatch {path}: ckpt {arr.dtype} vs "
+                f"{np.dtype(ref.dtype)}")
         if sh is not None:
             out.append(jax.device_put(arr, sh))
         else:
             out.append(jax.numpy.asarray(arr))
     return treedef.unflatten(out), step
+
+
+def load_checkpoint_flat(root: str | Path, step: Optional[int] = None, *,
+                         verify: bool = True) -> tuple[dict, int]:
+    """Manifest-driven restore: ``{path: np.ndarray}`` with no ``tree_like``.
+
+    The manifest itself carries every path/shape/dtype, so a flat-dict
+    checkpoint (the stage-boundary states of ``repro.run.resilient``)
+    round-trips without the caller pre-declaring the structure — which is
+    what lets a resumed run restore a stage whose shapes it cannot know
+    yet (e.g. a top-K list widened by the overflow policy before the
+    crash).  CRC verification is identical to :func:`load_checkpoint`.
+    """
+    root = Path(root)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {root}")
+    d = root / f"step_{step:09d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    return {e["path"]: _verified_leaf(d, e, step, verify)
+            for e in manifest["leaves"]}, step
 
 
 class CheckpointManager:
@@ -171,6 +205,21 @@ class CheckpointManager:
         self.wait()
         return load_checkpoint(self.root, tree_like, step,
                                shardings=shardings)
+
+    def restore_flat(self, step: Optional[int] = None):
+        """Manifest-driven ``{path: array}`` restore (no ``tree_like``)."""
+        self.wait()
+        return load_checkpoint_flat(self.root, step)
+
+    def step_dir(self, step: int) -> Path:
+        return self.root / f"step_{step:09d}"
+
+    def available_steps(self) -> list:
+        """Ascending steps with a manifest on disk (corrupt leaves are only
+        detected at restore time — callers fall back step by step)."""
+        return sorted(int(p.name.split("_")[1])
+                      for p in self.root.glob("step_*")
+                      if p.is_dir() and (p / "manifest.json").exists())
 
     def _gc(self):
         steps = sorted(int(p.name.split("_")[1])

@@ -53,13 +53,17 @@ class DSCOutput:
     rmse: jnp.ndarray               # Sec. 6.2 quality metric
 
 
-def _finish(batch, params, join, vote, masks, plan: EnginePlan,
-            tile_ids=None) -> DSCOutput:
-    """Segmentation onward — shared by every join/vote front-end.
+# --------------------------------------------------------------------------
+# Stage bodies.  The monolithic jits below AND the per-stage entry points
+# (run_stage_*) compose these same functions, so a staged run executes
+# literally the same traced code per stage as a straight-through run — that
+# code-sharing is the resilient runner's bit-identity argument
+# (``repro.run.resilient``, DESIGN.md §10).
+# --------------------------------------------------------------------------
 
-    ``plan`` is a resolved :class:`EnginePlan` with a concrete ``sim_topk``
-    (the dispatcher clamps K to S before tracing).
-    """
+
+def _segment_body(batch, params, vote, masks, plan: EnginePlan):
+    """Voting signal -> segmentation -> subtrajectory table."""
     nvote = voting.normalized_voting(vote, batch.valid)
     if params.segmentation == "tsa1":
         seg = segmentation.tsa1(nvote, batch.valid, params.w, params.tau,
@@ -68,10 +72,14 @@ def _finish(batch, params, join, vote, masks, plan: EnginePlan,
         seg = segmentation.tsa2(masks, batch.valid, params.w, params.tau,
                                 params.max_subtrajs_per_traj,
                                 use_kernel=plan.seg_use_kernel)
-
     table = similarity.build_subtraj_table(
         batch, seg, vote, params.max_subtrajs_per_traj)
+    return seg, table
 
+
+def _similarity_body(batch, params, join, seg, table, plan: EnginePlan,
+                     tile_ids=None):
+    """SP relation: returns ``(sim, topk)`` — exactly one is non-None."""
     if plan.sim_mode == "topk":
         # sparse SP relation: panel-streamed top-K lists, never [S, S]
         if join is None:
@@ -92,14 +100,7 @@ def _finish(batch, params, join, vote, masks, plan: EnginePlan,
                 join, seg, seg.sub_local, table,
                 params.max_subtrajs_per_traj, k=plan.sim_topk,
                 panel=plan.sim_panel)
-        result = cluster(topk, table, params, engine=plan.cluster_engine,
-                         use_kernel=plan.cluster_use_kernel,
-                         tiles=plan.cluster_tiles)
-        overflow = similarity.topk_overflow(topk, result.alpha_used)
-        return DSCOutput(join=join, vote=vote, seg=seg, table=table,
-                         sim=None, sim_topk=topk, sim_overflow=overflow,
-                         result=result, sscr=sscr_from_result(result),
-                         rmse=rmse_from_result(result, params.eps_sp))
+        return None, topk
 
     if join is None:
         from repro.kernels.stjoin import ops as stjoin_ops
@@ -112,19 +113,54 @@ def _finish(batch, params, join, vote, masks, plan: EnginePlan,
     else:
         sim = similarity.similarity_matrix(
             join, seg, seg.sub_local, table, params.max_subtrajs_per_traj)
+    return sim, None
 
-    result = cluster(sim, table, params, engine=plan.cluster_engine,
+
+def _cluster_body(simlike, table, params, plan: EnginePlan):
+    """Problem 3: returns ``(result, overflow)``; overflow is None for the
+    dense path (the certificate only exists for truncated top-K lists)."""
+    result = cluster(simlike, table, params, engine=plan.cluster_engine,
                      use_kernel=plan.cluster_use_kernel,
                      tiles=plan.cluster_tiles)
+    if isinstance(simlike, TopKSim):
+        return result, similarity.topk_overflow(simlike, result.alpha_used)
+    return result, None
+
+
+def _score_body(result, sim, params):
+    """Quality metrics: moment-based when the dense matrix was skipped."""
+    if sim is None:
+        return sscr_from_result(result), rmse_from_result(result,
+                                                          params.eps_sp)
+    return sscr(result, sim), rmse(result, sim, params.eps_sp)
+
+
+def _finish(batch, params, join, vote, masks, plan: EnginePlan,
+            tile_ids=None) -> DSCOutput:
+    """Segmentation onward — shared by every join/vote front-end.
+
+    ``plan`` is a resolved :class:`EnginePlan` with a concrete ``sim_topk``
+    (the dispatcher clamps K to S before tracing).
+    """
+    seg, table = _segment_body(batch, params, vote, masks, plan)
+    sim, topk = _similarity_body(batch, params, join, seg, table, plan,
+                                 tile_ids=tile_ids)
+    result, overflow = _cluster_body(topk if topk is not None else sim,
+                                     table, params, plan)
+    sscr_v, rmse_v = _score_body(result, sim, params)
     return DSCOutput(join=join, vote=vote, seg=seg, table=table, sim=sim,
-                     sim_topk=None, sim_overflow=None,
-                     result=result, sscr=sscr(result, sim),
-                     rmse=rmse(result, sim, params.eps_sp))
+                     sim_topk=topk, sim_overflow=overflow, result=result,
+                     sscr=sscr_v, rmse=rmse_v)
 
 
-@functools.partial(jax.jit, static_argnames=("plan",))
-def _run_dsc_materialize(batch: TrajectoryBatch, params: DSCParams,
-                         plan: EnginePlan) -> DSCOutput:
+def _vote_from_join_body(params, join):
+    vote = voting.point_voting(join)
+    masks = (voting.neighbor_mask_packed(join)
+             if params.segmentation == "tsa2" else None)
+    return vote, masks
+
+
+def _join_vote_materialize_body(batch, params, plan: EnginePlan):
     if plan.use_kernel:
         from repro.kernels.stjoin import ops as stjoin_ops
         join = stjoin_ops.subtrajectory_join(
@@ -133,9 +169,14 @@ def _run_dsc_materialize(batch: TrajectoryBatch, params: DSCParams,
         join = geometry.subtrajectory_join(
             batch, batch, params.eps_sp, params.eps_t, params.delta_t,
             use_index=plan.use_index)
-    vote = voting.point_voting(join)
-    masks = (voting.neighbor_mask_packed(join)
-             if params.segmentation == "tsa2" else None)
+    vote, masks = _vote_from_join_body(params, join)
+    return join, vote, masks
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _run_dsc_materialize(batch: TrajectoryBatch, params: DSCParams,
+                         plan: EnginePlan) -> DSCOutput:
+    join, vote, masks = _join_vote_materialize_body(batch, params, plan)
     return _finish(batch, params, join, vote, masks, plan)
 
 
@@ -144,9 +185,7 @@ def _run_dsc_from_join(batch: TrajectoryBatch, params: DSCParams,
                        join: JoinResult, plan: EnginePlan) -> DSCOutput:
     """Materializing tail for a join produced outside the jit boundary
     (the host-planned index-pruned Pallas join)."""
-    vote = voting.point_voting(join)
-    masks = (voting.neighbor_mask_packed(join)
-             if params.segmentation == "tsa2" else None)
+    vote, masks = _vote_from_join_body(params, join)
     return _finish(batch, params, join, vote, masks, plan)
 
 
@@ -158,18 +197,102 @@ def _tile_kwargs(fused_tiles):
     return dict(rows=rows, bc=bc, bm=bm)
 
 
-@functools.partial(jax.jit, static_argnames=("plan",))
-def _run_dsc_fused(batch: TrajectoryBatch, params: DSCParams,
-                   tile_ids, plan: EnginePlan) -> DSCOutput:
+def _join_vote_fused_body(batch, params, tile_ids, plan: EnginePlan):
     from repro.kernels.stjoin import ops as stjoin_ops
-    vote, masks = stjoin_ops.stjoin_vote_fused_arrays(
+    return stjoin_ops.stjoin_vote_fused_arrays(
         batch.x, batch.y, batch.t, batch.valid, batch.traj_id,
         batch.x, batch.y, batch.t, batch.valid, batch.traj_id,
         params.eps_sp, params.eps_t, params.delta_t, tile_ids=tile_ids,
         with_masks=params.segmentation == "tsa2",
         **_tile_kwargs(plan.fused_tiles))
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _run_dsc_fused(batch: TrajectoryBatch, params: DSCParams,
+                   tile_ids, plan: EnginePlan) -> DSCOutput:
+    vote, masks = _join_vote_fused_body(batch, params, tile_ids, plan)
     return _finish(batch, params, None, vote, masks, plan,
                    tile_ids=tile_ids)
+
+
+# --------------------------------------------------------------------------
+# Per-stage entry points — the checkpointable boundaries of the resilient
+# runner (``repro.run.resilient``).  Each jits exactly the body the
+# monolithic pipeline runs for that stage, so stage k's output fed into
+# stage k+1 reproduces the straight-through run bit for bit.
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def run_stage_join(batch: TrajectoryBatch, params: DSCParams,
+                   plan: EnginePlan):
+    """Materialize-mode stage 1: join cube + votes (+ TSA2 words)."""
+    return _join_vote_materialize_body(batch, params, plan)
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def run_stage_join_fused(batch: TrajectoryBatch, params: DSCParams,
+                         tile_ids, plan: EnginePlan):
+    """Fused-mode stage 1: ``(vote, masks)`` — the cube never exists."""
+    return _join_vote_fused_body(batch, params, tile_ids, plan)
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def run_stage_vote_from_join(batch: TrajectoryBatch, params: DSCParams,
+                             join: JoinResult, plan: EnginePlan):
+    """Stage 1 tail for a host-planned (index-pruned) join."""
+    return _vote_from_join_body(params, join)
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def run_stage_segment(batch: TrajectoryBatch, params: DSCParams, vote,
+                      masks, plan: EnginePlan):
+    """Stage 2: segmentation + subtrajectory table from the vote state."""
+    return _segment_body(batch, params, vote, masks, plan)
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def run_stage_similarity(batch: TrajectoryBatch, params: DSCParams, join,
+                         seg: SubtrajSegmentation, table: SubtrajTable,
+                         tile_ids, plan: EnginePlan):
+    """Stage 3: SP relation — ``(sim, topk)``, exactly one non-None.
+    ``plan.sim_topk`` must be concrete (clamp K to S before calling)."""
+    return _similarity_body(batch, params, join, seg, table, plan,
+                            tile_ids=tile_ids)
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def run_stage_cluster(simlike, table: SubtrajTable, params: DSCParams,
+                      plan: EnginePlan):
+    """Stage 4: clustering — ``(result, overflow)``."""
+    return _cluster_body(simlike, table, params, plan)
+
+
+@jax.jit
+def run_stage_score(result: ClusteringResult, sim, params: DSCParams):
+    """Stage 5 epilogue: ``(sscr, rmse)`` from the clustering state."""
+    return _score_body(result, sim, params)
+
+
+def plan_fused_tile_ids(batch: TrajectoryBatch, params: DSCParams,
+                        plan: EnginePlan):
+    """Host-side fused-tile planning (``mode="fused"`` + ``use_index``).
+
+    Returns ``(tile_ids, plan)`` where the plan has the tile plan's
+    resolved geometry bound, so every later sweep uses the exact tiling
+    the ids were built for.  ``tile_ids`` is None when the index is off.
+    Shared by :func:`run_dsc`'s dispatcher and the resilient runner —
+    both must plan identically for resume parity.
+    """
+    if not (plan.mode == "fused" and plan.use_index):
+        return None, plan
+    from repro.kernels.stjoin import ops as stjoin_ops
+    tp = stjoin_ops.plan_fused_tiles(
+        batch.x, batch.y, batch.t, batch.valid,
+        batch.x, batch.y, batch.t, batch.valid,
+        params.eps_sp, params.eps_t, **_tile_kwargs(plan.fused_tiles))
+    return tp.tile_ids, plan.replace(fused_rows=tp.rows, fused_bc=tp.bc,
+                                     fused_bm=tp.bm)
 
 
 def run_dsc_lowerable(batch: TrajectoryBatch, params: DSCParams,
@@ -208,6 +331,7 @@ def run_dsc(batch: TrajectoryBatch, params: DSCParams,
             sim_topk: int | None = None,
             sim_panel: int | None = None,
             sim_topk_retry: bool = True,
+            on_overflow: str | None = None,
             plan: EnginePlan | None = None) -> DSCOutput:
     """Run the full DSC pipeline on one host / one partition.
 
@@ -246,6 +370,12 @@ def run_dsc(batch: TrajectoryBatch, params: DSCParams,
     ``sim_topk`` sets K (default 32, clamped to S); ``sim_panel`` bounds
     the streaming panel height Sb (default 128, snapped to a divisor of
     S).  ``out.sim`` is None in this mode (use ``out.sim_topk``).
+
+    ``on_overflow`` names the certificate-violation policy explicitly
+    (DESIGN.md §10): ``"widen"`` retries with K doubled, ``"raise"``
+    raises immediately, ``"degrade"`` returns the truncated result with
+    the violation recorded in ``out.sim_overflow``.  The default (None)
+    keeps the legacy ``sim_topk_retry`` behavior; passing both raises.
     """
     plan = resolve_plan(plan, mode=mode, use_kernel=use_kernel,
                         use_index=use_index, fused_tiles=fused_tiles,
@@ -254,25 +384,24 @@ def run_dsc(batch: TrajectoryBatch, params: DSCParams,
                         seg_use_kernel=seg_use_kernel, sim_mode=sim_mode,
                         sim_topk=sim_topk, sim_panel=sim_panel)
 
+    if on_overflow is not None:
+        if on_overflow not in ("raise", "widen", "degrade"):
+            raise ValueError(f"on_overflow={on_overflow!r}: expected "
+                             "'raise', 'widen', or 'degrade'")
+        if not sim_topk_retry:
+            raise ValueError("pass either on_overflow or "
+                             "sim_topk_retry=False, not both")
+        policy = on_overflow
+    else:
+        policy = "widen" if sim_topk_retry else "raise"
+
     S = batch.num_trajs * params.max_subtrajs_per_traj
     k = min(plan.sim_topk if plan.sim_topk is not None else 32, S)
 
     def dispatch(k):
         p = plan.replace(sim_topk=k)
         if p.mode == "fused":
-            tile_ids = None
-            if p.use_index:
-                from repro.kernels.stjoin import ops as stjoin_ops
-                tp = stjoin_ops.plan_fused_tiles(
-                    batch.x, batch.y, batch.t, batch.valid,
-                    batch.x, batch.y, batch.t, batch.valid,
-                    params.eps_sp, params.eps_t,
-                    **_tile_kwargs(p.fused_tiles))
-                # bind the tile plan's resolved geometry so both passes
-                # sweep the exact tiling the ids were built for
-                tile_ids = tp.tile_ids
-                p = p.replace(fused_rows=tp.rows, fused_bc=tp.bc,
-                              fused_bm=tp.bm)
+            tile_ids, p = plan_fused_tile_ids(batch, params, p)
             return _run_dsc_fused(batch, params, tile_ids, p)
         if p.use_index and p.use_kernel:
             # grid-pruned Pallas join: host-side planning pass, then
@@ -289,11 +418,11 @@ def run_dsc(batch: TrajectoryBatch, params: DSCParams,
     while True:
         out = dispatch(k)
         overflow = int(out.sim_overflow)
-        if overflow == 0:
+        if overflow == 0 or policy == "degrade":
             return out
         if k >= S:                  # unreachable: K == S cannot spill
             raise AssertionError("overflow with K == S")
-        if not sim_topk_retry:
+        if policy == "raise":
             raise RuntimeError(
                 f"sim_topk={k} truncated a potential alpha-edge on "
                 f"{overflow} rows (spill >= alpha): labels would not be "

@@ -8,11 +8,14 @@ mean exceeds the fleet median by ``threshold`` sigmas (or ratio).
 
 Hooks: ``on_straggler`` receives (host_id, ratio); production deployments
 wire this to the elastic controller (checkpoint-evict-restart, or re-split
-the equi-depth partitions the way the paper rebalances time bins).
+the equi-depth partitions the way the paper rebalances time bins —
+``suggest_rebalance_edges`` computes that re-split; the resilient runner
+``repro.run.resilient`` records both in its JSONL telemetry).
 """
 from __future__ import annotations
 
 import collections
+import warnings
 from typing import Callable, Optional
 
 import numpy as np
@@ -37,6 +40,13 @@ class StragglerMonitor:
         for h, s in enumerate(step_seconds):
             self.record(h, float(s))
 
+    def reset(self, host: int):
+        """Drop a host's history (and any current flag) — an evicted or
+        rebalanced rank restarts with a clean series, so its pre-eviction
+        step times can't keep re-flagging it."""
+        self.history[host].clear()
+        self.flagged.pop(host, None)
+
     def check(self) -> dict[int, float]:
         """Returns {host: ratio} for currently-flagged stragglers."""
         means = []
@@ -44,7 +54,11 @@ class StragglerMonitor:
             buf = list(self.history[h])[-self.window:]
             means.append(np.mean(buf) if buf else np.nan)
         means = np.asarray(means)
-        fleet = np.nanmedian(means)
+        with warnings.catch_warnings():
+            # hosts with no samples contribute NaN; an all-NaN fleet is a
+            # legal "no data yet" state, not a RuntimeWarning
+            warnings.simplefilter("ignore", RuntimeWarning)
+            fleet = np.nanmedian(means)
         self.flagged = {}
         if not np.isfinite(fleet) or fleet <= 0:
             return self.flagged
@@ -66,3 +80,30 @@ class StragglerMonitor:
         w1 = np.mean(buf[-2 * self.window:-self.window])
         w2 = np.mean(buf[-self.window:])
         return abs(w2 - w1) / max(w1, 1e-9) > tau
+
+
+def suggest_rebalance_edges(times, part_of: np.ndarray,
+                            flagged: dict[int, float],
+                            P: int) -> np.ndarray:
+    """Slowdown-weighted equi-depth re-split of the temporal bins.
+
+    ``times``/``part_of`` give each valid point's timestamp and current
+    partition; a point in a flagged partition is weighted by that
+    partition's slowdown ratio, so the weighted equi-depth quantiles
+    narrow the slow partitions' time ranges proportionally — the paper's
+    time-bin rebalancing driven by the monitor's flags instead of the
+    input histogram.  Returns ``P + 1`` edges shaped like
+    ``repro.core.partitioning.equi_depth_edges`` (±inf outer edges).
+    """
+    times = np.asarray(times, np.float64).ravel()
+    part_of = np.asarray(part_of).ravel()
+    w = np.ones_like(times)
+    for p, ratio in flagged.items():
+        w[part_of == p] = max(float(ratio), 1.0)
+    order = np.argsort(times, kind="stable")
+    times, w = times[order], w[order]
+    cum = np.cumsum(w)
+    targets = cum[-1] * np.arange(1, P) / P
+    inner = times[np.searchsorted(cum, targets, side="left")]
+    inner = np.maximum.accumulate(inner)
+    return np.concatenate(([-np.inf], inner, [np.inf]))

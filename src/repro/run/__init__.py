@@ -1,0 +1,21 @@
+"""Resilient execution layer: stage-graph runner + deterministic faults.
+
+``repro.run.resilient`` decomposes the DSC pipeline into checkpointable
+stage boundaries and resumes from the first incomplete stage;
+``repro.run.faults`` scripts deterministic failures (crash, transient
+error, checkpoint corruption, slowdown) against those boundaries so the
+recovery paths are testable without real crashes (DESIGN.md §10).
+"""
+from repro.run.faults import (FaultInjector, FaultPlan, InjectedCrash,
+                              RetriesExhausted, TransientFault,
+                              retry_with_backoff)
+from repro.run.resilient import (EXIT_CODES, CheckpointCorruption,
+                                 ResilientResult, run_resilient,
+                                 run_resilient_distributed)
+
+__all__ = [
+    "FaultPlan", "FaultInjector", "InjectedCrash", "TransientFault",
+    "RetriesExhausted", "retry_with_backoff", "CheckpointCorruption",
+    "ResilientResult", "run_resilient", "run_resilient_distributed",
+    "EXIT_CODES",
+]
