@@ -10,6 +10,8 @@ shuffle into a single static ``all_to_all`` (DESIGN.md §2).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.core.types import TrajectoryBatch
@@ -20,7 +22,15 @@ import jax.numpy as jnp
 
 @pytree_dataclass
 class PartitionedBatch:
-    """Row-aligned temporal partitions: ``[P, T, Mp]`` point slabs."""
+    """Row-aligned temporal partitions: ``[P, T, Mp]`` point slabs.
+
+    ``edges`` / ``src_m`` record the layout that produced the slabs (the
+    cut edges, float64 so boundary classification survives a round-trip,
+    and each slot's source column in the ``[T, M]`` batch).  They are
+    host-side numpy arrays, never traced; ``None`` on hand-built batches
+    (e.g. dry-run shape structs) — elastic resume / repartitioning
+    require them.
+    """
 
     x: jnp.ndarray       # [P, T, Mp] float32
     y: jnp.ndarray       # [P, T, Mp]
@@ -28,6 +38,8 @@ class PartitionedBatch:
     valid: jnp.ndarray   # [P, T, Mp] bool
     traj_id: jnp.ndarray  # [T] int32 global ids (-1 padding rows)
     ranges: jnp.ndarray  # [P, 2] float32 (t_lo, t_hi) per partition
+    edges: np.ndarray | None = None   # [P+1] float64 cut edges (±inf outer)
+    src_m: np.ndarray | None = None   # [P, T, Mp] int32 source column (-1 pad)
 
     @property
     def num_partitions(self) -> int:
@@ -87,6 +99,41 @@ def equi_depth_edges(times: np.ndarray, P: int,
     return qs.astype(np.float64)
 
 
+def _layout_fields(t: np.ndarray, valid: np.ndarray, edges: np.ndarray,
+                   P: int):
+    """The deterministic (row, column) -> (partition, slot) map.
+
+    One argsort-by-(partition, row, time-position) + scatter instead of
+    the O(P*T) per-cell np.nonzero double loop (equality with the loop
+    version is pinned by tests/test_partition.py).  Valid flat indices
+    are already (row, m)-ordered, so a stable sort by partition alone
+    yields (p, r, m) order — m order is what the loop's np.nonzero
+    produced per cell.  Returns ``(order, p_of, r_of, slot, counts)``
+    over the valid points; ``counts`` is the ``[P, T]`` cell histogram.
+    """
+    T, M = t.shape
+    pidx = np.searchsorted(edges, t, side="right") - 1
+    pidx = np.clip(pidx, 0, P - 1)
+    pidx = np.where(valid, pidx, -1)
+    rows = np.broadcast_to(np.arange(T)[:, None], (T, M))
+    flat = np.nonzero(valid.ravel())[0]
+    order = flat[np.argsort(pidx.ravel()[flat], kind="stable")]
+    p_of = pidx.ravel()[order]
+    r_of = rows.ravel()[order]
+    grp = p_of * T + r_of                       # contiguous ascending groups
+    counts = np.bincount(grp, minlength=P * T).reshape(P, T)
+    # slot within the (partition, row) cell: global position minus the
+    # cell's start (the exclusive cumulative count of earlier cells)
+    start = np.concatenate(([0], np.cumsum(counts.ravel())))[grp]
+    slot = np.arange(order.size) - start
+    return order, p_of, r_of, slot, counts
+
+
+def _pad_mp(counts: np.ndarray, pad_mp_to: int) -> int:
+    Mp = int(counts.max(initial=1))
+    return max(pad_mp_to, ((Mp + pad_mp_to - 1) // pad_mp_to) * pad_mp_to)
+
+
 def partition_batch(batch: TrajectoryBatch, P: int, *, pad_mp_to: int = 8,
                     sample: int | None = 100_000) -> PartitionedBatch:
     """Split a TrajectoryBatch into P row-aligned temporal partitions."""
@@ -97,40 +144,29 @@ def partition_batch(batch: TrajectoryBatch, P: int, *, pad_mp_to: int = 8,
     T, M = x.shape
 
     edges = equi_depth_edges(t[v], P, sample=sample)
-    # partition index per point
-    pidx = np.searchsorted(edges, t, side="right") - 1
-    pidx = np.clip(pidx, 0, P - 1)
-    pidx = np.where(v, pidx, -1)
+    return _scatter_batch(x, y, t, v, batch.traj_id, edges, P,
+                          pad_mp_to=pad_mp_to)
 
-    # one argsort-by-(partition, row, time-position) + scatter instead of
-    # the O(P*T) per-cell np.nonzero double loop (equality with the loop
-    # version is pinned by tests/test_partition.py).  Valid flat indices
-    # are already (row, m)-ordered, so a stable sort by partition alone
-    # yields (p, r, m) order — m order is what the loop's np.nonzero
-    # produced per cell.
-    rows = np.broadcast_to(np.arange(T)[:, None], (T, M))
-    flat = np.nonzero(v.ravel())[0]
-    order = flat[np.argsort(pidx.ravel()[flat], kind="stable")]
-    p_of = pidx.ravel()[order]
-    r_of = rows.ravel()[order]
-    grp = p_of * T + r_of                       # contiguous ascending groups
-    counts = np.bincount(grp, minlength=P * T).reshape(P, T)
-    Mp = int(counts.max(initial=1))
-    Mp = max(pad_mp_to, ((Mp + pad_mp_to - 1) // pad_mp_to) * pad_mp_to)
 
-    # slot within the (partition, row) cell: global position minus the
-    # cell's start (the exclusive cumulative count of earlier cells)
-    start = np.concatenate(([0], np.cumsum(counts.ravel())))[grp]
-    slot = np.arange(order.size) - start
+def _scatter_batch(x, y, t, v, traj_id, edges, P, *,
+                   pad_mp_to: int = 8) -> PartitionedBatch:
+    """Scatter global ``[T, M]`` point arrays into the row-aligned layout
+    defined by ``edges`` (the shared core of :func:`partition_batch` and
+    :func:`repartition_batch`)."""
+    T, M = x.shape
+    order, p_of, r_of, slot, counts = _layout_fields(t, v, edges, P)
+    Mp = _pad_mp(counts, pad_mp_to)
 
     px = np.zeros((P, T, Mp), np.float32)
     py = np.zeros((P, T, Mp), np.float32)
     pt = np.zeros((P, T, Mp), np.float32)
     pv = np.zeros((P, T, Mp), bool)
+    src_m = np.full((P, T, Mp), -1, np.int32)
     px[p_of, r_of, slot] = x.ravel()[order]
     py[p_of, r_of, slot] = y.ravel()[order]
     pt[p_of, r_of, slot] = t.ravel()[order]
     pv[p_of, r_of, slot] = True
+    src_m[p_of, r_of, slot] = order - r_of * M
 
     finite_lo = np.where(np.isfinite(edges[:-1]), edges[:-1],
                          t[v].min() - 1.0)
@@ -139,5 +175,224 @@ def partition_batch(batch: TrajectoryBatch, P: int, *, pad_mp_to: int = 8,
 
     return PartitionedBatch(
         x=jnp.asarray(px), y=jnp.asarray(py), t=jnp.asarray(pt),
-        valid=jnp.asarray(pv), traj_id=batch.traj_id,
-        ranges=jnp.asarray(ranges))
+        valid=jnp.asarray(pv), traj_id=traj_id,
+        ranges=jnp.asarray(ranges),
+        edges=np.asarray(edges, np.float64), src_m=src_m)
+
+
+# ===================================================================== #
+# canonical global form: gather / repartition (DESIGN.md §11)           #
+# ===================================================================== #
+#
+# Every per-point stage leaf is laid out ``[P, T, Mp, ...]`` by the same
+# deterministic (row, column) -> (partition, slot) map partition_batch
+# scatters with, so folding a leaf back to global ``[T, M, ...]`` point
+# space — and re-cutting it for a different P or different edges — needs
+# only ``(t, valid, edges)``.  That triple is the *canonical layout key*
+# a checkpoint records (``meta/*`` leaves in repro.run.resilient), and
+# PointLayout is its executable form.
+#
+# Two leaf kinds exist:
+#
+# * ``kind="point"`` — values ride with their point (vote, packed TSA2
+#   masks, labels, join best_w).  Gather/scatter permute positions only.
+# * ``kind="cand_idx"`` — values *index* the join's candidate halo slab
+#   ``[own | p-1 | p+1]`` (3*Mp columns, zeros past the edge partitions,
+#   per core.distributed._nbr).  Translation goes through the candidate
+#   point's global identity: slab column -> (partition, slot) -> global
+#   column on gather, and the inverse on scatter.  A candidate outside
+#   the new layout's halo maps to column 0 — only reachable for entries
+#   whose join weight is 0 (a weight > 0 pair is found identically by a
+#   straight-through run at the new layout, which requires the candidate
+#   inside its halo), and 0-weight entries are bit-inert downstream.
+
+
+@dataclasses.dataclass(frozen=True)
+class PointLayout:
+    """The (row, column) -> (partition, slot) map of one row-aligned
+    temporal layout, recomputable from ``(t, valid, edges)`` alone."""
+
+    edges: np.ndarray    # [P+1] float64
+    t: np.ndarray        # [T, M] global timestamps (float32)
+    valid: np.ndarray    # [T, M] bool
+    Mp: int
+    p_of: np.ndarray     # [n_valid] partition per point (layout order)
+    r_of: np.ndarray     # [n_valid] row per point
+    m_of: np.ndarray     # [n_valid] global column per point
+    slot: np.ndarray     # [n_valid] slot within the (p, r) cell
+    src_m: np.ndarray    # [P, T, Mp] int32 inverse map (-1 padding)
+
+    @property
+    def P(self) -> int:
+        return len(self.edges) - 1
+
+    @property
+    def T(self) -> int:
+        return self.t.shape[0]
+
+    @property
+    def M(self) -> int:
+        return self.t.shape[1]
+
+    @classmethod
+    def from_global(cls, t, valid, edges, *, Mp: int | None = None,
+                    pad_mp_to: int = 8) -> "PointLayout":
+        t = np.asarray(t, np.float32)
+        valid = np.asarray(valid, bool)
+        edges = np.asarray(edges, np.float64)
+        P = len(edges) - 1
+        T, M = t.shape
+        order, p_of, r_of, slot, counts = _layout_fields(t, valid, edges, P)
+        if Mp is None:
+            Mp = _pad_mp(counts, pad_mp_to)
+        m_of = order - r_of * M
+        src_m = np.full((P, T, Mp), -1, np.int32)
+        src_m[p_of, r_of, slot] = m_of
+        return cls(edges=edges, t=t, valid=valid, Mp=int(Mp), p_of=p_of,
+                   r_of=r_of, m_of=m_of, slot=slot, src_m=src_m)
+
+    @classmethod
+    def from_parts(cls, parts: PartitionedBatch) -> "PointLayout":
+        """Layout of a ``partition_batch``-produced batch (requires the
+        recorded ``edges``/``src_m``)."""
+        if parts.edges is None or parts.src_m is None:
+            raise ValueError(
+                "PartitionedBatch carries no layout record (edges/src_m "
+                "are None): rebuild it with repro.core.partitioning."
+                "partition_batch to enable gather/repartition")
+        src = np.asarray(parts.src_m)
+        pt = np.asarray(parts.t)
+        pv = np.asarray(parts.valid)
+        P, T, Mp = src.shape
+        M = int(src.max(initial=0)) + 1
+        t = np.zeros((T, M), np.float32)
+        valid = np.zeros((T, M), bool)
+        p, r, s = np.nonzero(pv)
+        t[r, src[p, r, s]] = pt[p, r, s]
+        valid[r, src[p, r, s]] = True
+        return cls.from_global(t, valid, parts.edges, Mp=Mp)
+
+    # ------------------------------------------------------------ queries
+    def same_points(self, other: "PointLayout") -> bool:
+        return (self.t.shape == other.t.shape
+                and np.array_equal(self.valid, other.valid)
+                and np.array_equal(self.t[self.valid],
+                                   other.t[other.valid]))
+
+    def same_layout(self, other: "PointLayout") -> bool:
+        return (self.same_points(other) and self.Mp == other.Mp
+                and np.array_equal(self.edges, other.edges))
+
+    # ------------------------------------------------- point-value leaves
+    def gather(self, leaf) -> np.ndarray:
+        """``[P, T, Mp, ...]`` partitioned leaf -> global ``[T, M, ...]``
+        (zeros at invalid positions)."""
+        leaf = np.asarray(leaf)
+        out = np.zeros((self.T, self.M) + leaf.shape[3:], leaf.dtype)
+        out[self.r_of, self.m_of] = leaf[self.p_of, self.r_of, self.slot]
+        return out
+
+    def scatter(self, glob) -> np.ndarray:
+        """Global ``[T, M, ...]`` -> this layout's ``[P, T, Mp, ...]``."""
+        glob = np.asarray(glob)
+        out = np.zeros((self.P, self.T, self.Mp) + glob.shape[2:],
+                       glob.dtype)
+        out[self.p_of, self.r_of, self.slot] = glob[self.r_of, self.m_of]
+        return out
+
+    # ----------------------------------------- halo-slab candidate indices
+    def gather_cand_idx(self, leaf) -> np.ndarray:
+        """``[P, T, Mp, ...]`` leaf of slab column indices -> global
+        candidate columns (−1 where the slab position holds padding)."""
+        leaf = np.asarray(leaf)
+        vals = leaf[self.p_of, self.r_of, self.slot]       # [n, ...]
+        block = vals // self.Mp                # 0 own, 1 p-1, 2 p+1
+        off = np.where(block == 1, -1, np.where(block == 2, 1, 0))
+        q = self.p_of.reshape((-1,) + (1,) * (vals.ndim - 1)) + off
+        s = vals % self.Mp
+        rc = self._cand_rows(vals.shape)
+        ok = (q >= 0) & (q < self.P)
+        gm = np.where(ok, self.src_m[np.clip(q, 0, self.P - 1), rc, s], -1)
+        out = np.full((self.T, self.M) + leaf.shape[3:], -1, np.int32)
+        out[self.r_of, self.m_of] = gm
+        return out
+
+    def scatter_cand_idx(self, glob) -> np.ndarray:
+        """Global candidate columns -> this layout's slab indices.
+        Out-of-halo / invalid candidates map to column 0 (bit-inert:
+        their join weight is 0)."""
+        glob = np.asarray(glob)
+        vals = glob[self.r_of, self.m_of]                  # [n, ...]
+        pmap, smap = self._point_ps()
+        rc = self._cand_rows(vals.shape)
+        ok = vals >= 0
+        vc = np.clip(vals, 0, self.M - 1)
+        q = np.where(ok, pmap[rc, vc], -1)
+        s = smap[rc, vc]
+        d = q - self.p_of.reshape((-1,) + (1,) * (vals.ndim - 1))
+        j = np.where(d == 0, s,
+                     np.where(d == -1, self.Mp + s,
+                              np.where(d == 1, 2 * self.Mp + s, 0)))
+        j = np.where(ok & (q >= 0), j, 0)
+        out = np.zeros((self.P, self.T, self.Mp) + glob.shape[2:],
+                       np.int32)
+        out[self.p_of, self.r_of, self.slot] = j.astype(np.int32)
+        return out
+
+    def _cand_rows(self, shape):
+        """Candidate-row index grid for a cube's trailing ``[..., T]``
+        axis (the join cube's last axis enumerates global rows)."""
+        if len(shape) < 2 or shape[-1] != self.T:
+            raise ValueError(
+                f"cand_idx leaf trailing shape {shape[1:]} does not end "
+                f"in the global row count T={self.T}")
+        rc = np.arange(self.T)
+        return np.broadcast_to(rc, shape)
+
+    def _point_ps(self):
+        """Inverse maps ``[T, M] -> partition / slot`` (−1 invalid)."""
+        pmap = np.full((self.T, self.M), -1, np.int32)
+        smap = np.zeros((self.T, self.M), np.int32)
+        pmap[self.r_of, self.m_of] = self.p_of
+        smap[self.r_of, self.m_of] = self.slot
+        return pmap, smap
+
+
+def gather_global(leaf, layout: PointLayout, *,
+                  kind: str = "point") -> np.ndarray:
+    """Fold one per-partition ``[P, T, Mp, ...]`` stage leaf to the
+    canonical global ``[T, M, ...]`` point space (see module comment)."""
+    if kind == "point":
+        return layout.gather(leaf)
+    if kind == "cand_idx":
+        return layout.gather_cand_idx(leaf)
+    raise ValueError(f"kind={kind!r}: expected 'point' or 'cand_idx'")
+
+
+def repartition(leaf, old: PointLayout, new: PointLayout, *,
+                kind: str = "point") -> np.ndarray:
+    """Re-cut one stage leaf from ``old``'s layout to ``new``'s —
+    gather to global point space, scatter at the new edges/P/Mp."""
+    if not old.same_points(new):
+        raise ValueError("repartition across different point sets: the "
+                         "checkpoint and the current batch disagree on "
+                         "(t, valid)")
+    if kind == "point":
+        return new.scatter(old.gather(leaf))
+    if kind == "cand_idx":
+        return new.scatter_cand_idx(old.gather_cand_idx(leaf))
+    raise ValueError(f"kind={kind!r}: expected 'point' or 'cand_idx'")
+
+
+def repartition_batch(parts: PartitionedBatch, edges,
+                      *, pad_mp_to: int = 8) -> PartitionedBatch:
+    """Re-cut a partitioned batch at explicit ``edges`` (same P or a new
+    one) — the apply path of straggler-driven rebalancing and of
+    adopting a checkpoint's post-rebalance cut on resume."""
+    layout = PointLayout.from_parts(parts)
+    x = layout.gather(parts.x)
+    y = layout.gather(parts.y)
+    t = layout.gather(parts.t)
+    edges = np.asarray(edges, np.float64)
+    return _scatter_batch(x, y, t, layout.valid, parts.traj_id, edges,
+                          len(edges) - 1, pad_mp_to=pad_mp_to)

@@ -4,18 +4,24 @@
 stage boundaries and resumes from the first incomplete stage;
 ``repro.run.faults`` scripts deterministic failures (crash, transient
 error, checkpoint corruption, slowdown) against those boundaries so the
-recovery paths are testable without real crashes (DESIGN.md §10).
+recovery paths are testable without real crashes (DESIGN.md §10);
+``repro.run.rebalance`` decides what the runner does with straggler
+flags — suggest or apply a slowdown-weighted repartitioning
+(DESIGN.md §11).
 """
 from repro.run.faults import (FaultInjector, FaultPlan, InjectedCrash,
                               RetriesExhausted, TransientFault,
                               retry_with_backoff)
-from repro.run.resilient import (EXIT_CODES, CheckpointCorruption,
-                                 ResilientResult, run_resilient,
+from repro.run.rebalance import RebalancePolicy
+from repro.run.resilient import (EXIT_CODES, TELEMETRY_SCHEMA,
+                                 CheckpointCorruption, ResilientResult,
+                                 read_telemetry, run_resilient,
                                  run_resilient_distributed)
 
 __all__ = [
     "FaultPlan", "FaultInjector", "InjectedCrash", "TransientFault",
     "RetriesExhausted", "retry_with_backoff", "CheckpointCorruption",
-    "ResilientResult", "run_resilient", "run_resilient_distributed",
+    "RebalancePolicy", "ResilientResult", "run_resilient",
+    "run_resilient_distributed", "read_telemetry", "TELEMETRY_SCHEMA",
     "EXIT_CODES",
 ]

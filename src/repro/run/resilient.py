@@ -36,14 +36,28 @@ Top-K certificate violations follow ``on_overflow``:
 
 Per-stage wall timings (plus any :class:`repro.run.faults.FaultPlan`
 scripted slowdowns) feed the :class:`repro.distributed.straggler.
-StragglerMonitor`; flagged partitions produce an ``equi_depth_edges``
-rebalance suggestion (``suggest_rebalance_edges``).  Everything is
-emitted as JSONL telemetry next to the checkpoints.
+StragglerMonitor`; what happens to a flag is the
+:class:`repro.run.rebalance.RebalancePolicy`'s call — emit an
+``equi_depth_edges`` re-cut suggestion (``suggest_rebalance_edges``,
+the default), or *apply* it: repartition the batch and all in-flight
+per-point stage state at the new cut, rebuild the stage programs, and
+checkpoint the post-rebalance state (``rebalanced`` telemetry event).
+Everything is emitted as JSONL telemetry next to the checkpoints.
+
+Distributed checkpoints additionally record the canonical layout key
+(``meta/*`` leaves: cut edges + global point set + model-axis width), so
+``elastic_resume=True`` can restore them onto a mesh with a *different*
+partition count: join/segment state folds to global point space and
+re-cuts for the new P (``repro.core.partitioning.gather_global`` /
+``repartition``), later stages — whose state is partition-bound — rewind
+to the segment boundary, and the finished run is bit-identical to a
+straight-through run at the new P (DESIGN.md §11).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import time
 from pathlib import Path
 from typing import Any, Callable, Optional
@@ -53,12 +67,15 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.core import dsc as dsc_mod
 from repro.core.clustering import rmse_from_result, sscr_from_result
+from repro.core.partitioning import (PointLayout, repartition,
+                                     repartition_batch)
 from repro.core.plan import EnginePlan, resolve_plan
 from repro.core.types import (ClusteringResult, JoinResult,
                               SubtrajSegmentation, SubtrajTable, TopKSim)
 from repro.distributed.straggler import (StragglerMonitor,
                                          suggest_rebalance_edges)
 from repro.run.faults import FaultInjector, FaultPlan, retry_with_backoff
+from repro.run.rebalance import RebalancePolicy
 from repro.utils.logging import get_logger
 
 log = get_logger("resilient")
@@ -97,6 +114,16 @@ _STAGE_KEYS = {
     "refine": ("final/", "sscr", "rmse"),
 }
 
+# the repartitionable subset of the distributed state: per-point leaves
+# ([P, T, Mp, ...] in the partition layout) and the halo-slab-indexed
+# join cube.  Everything else either is layout-free (the replicated
+# table) or partition-bound (similarity onward — no partition-free form;
+# elastic adaptation rewinds past it instead).
+_POINT_LEAVES = ("vote", "masks", "labels", "join/best_w")
+_CAND_IDX_LEAVES = ("join/best_idx",)
+
+TELEMETRY_SCHEMA = 1
+
 
 @dataclasses.dataclass
 class ResilientResult:
@@ -108,10 +135,16 @@ class ResilientResult:
     widen_count: int               # overflow-policy re-runs performed
     fallback_steps: list           # checkpoint steps discarded as corrupt
     events: list                   # telemetry events (also JSONL'd)
+    rebalance_count: int = 0       # straggler re-cuts applied
 
 
 class _Telemetry:
-    """Append-only JSONL event stream + in-memory copy."""
+    """Append-only JSONL event stream + in-memory copy.
+
+    Every event is flushed *and fsynced* before ``emit`` returns, so a
+    crash loses at most the line being written — and
+    :func:`read_telemetry` tolerates exactly that torn final line.
+    """
 
     def __init__(self, path: Optional[Path], clock: Callable[[], float]):
         self.path = Path(path) if path is not None else None
@@ -119,11 +152,35 @@ class _Telemetry:
         self.events: list[dict] = []
 
     def emit(self, event: str, **fields):
-        ev = {"ts": round(float(self.clock()), 6), "event": event, **fields}
+        ev = {"schema": TELEMETRY_SCHEMA,
+              "ts": round(float(self.clock()), 6), "event": event, **fields}
         self.events.append(ev)
         if self.path is not None:
             with open(self.path, "a") as f:
                 f.write(json.dumps(ev) + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+
+
+def read_telemetry(path) -> list[dict]:
+    """Parse a ``telemetry.jsonl`` stream, tolerating a truncated final
+    line (the crash-mid-write window ``_Telemetry``'s per-event fsync
+    leaves open).  Damage anywhere *before* the final line still raises
+    ``ValueError`` — that is corruption, not a torn tail."""
+    with open(path) as f:
+        lines = f.read().split("\n")
+    if lines and lines[-1] == "":
+        lines.pop()                    # well-terminated file
+    events: list[dict] = []
+    for i, line in enumerate(lines):
+        try:
+            events.append(json.loads(line))
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
+                break                  # torn final line: drop it
+            raise ValueError(
+                f"{path}: malformed telemetry at line {i + 1}") from None
+    return events
 
 
 def _drop_stage_keys(state: dict, stages) -> dict:
@@ -142,8 +199,10 @@ def _restore_with_fallback(mgr: CheckpointManager, on_corruption: str,
         try:
             state, _ = mgr.restore_flat(step)
             return state, step, discarded
-        except (IOError, ValueError, KeyError,
+        except (IOError, EOFError, ValueError, KeyError,
                 json.JSONDecodeError) as e:
+            # EOFError/OSError cover a *truncated* leaf file (np.load
+            # dies before the CRC check ever sees the short buffer)
             if on_corruption == "fail":
                 raise CheckpointCorruption(
                     f"checkpoint step {step} failed verification: {e}"
@@ -172,17 +231,29 @@ class _StageLoop:
 
     def __init__(self, *, plan: EnginePlan, checkpoint_dir, on_overflow,
                  on_corruption, fault_plan, max_retries, sleep, clock,
-                 monitor, n_partitions: int, S: int):
+                 monitor, n_partitions: int, S: int,
+                 rebalance: RebalancePolicy | None = None,
+                 sync_saves: bool = False):
         _check_policies(on_overflow, on_corruption)
         self.plan = plan
         self.on_overflow = on_overflow
         self.on_corruption = on_corruption
         self.injector = FaultInjector(fault_plan)
+        bad = sorted({int(p) for _, p, _ in self.injector.plan.slow
+                      if not 0 <= int(p) < n_partitions})
+        if bad:
+            raise ValueError(
+                f"FaultPlan.slow references partition(s) {bad} but this "
+                f"run has {n_partitions} partition(s) (valid indices "
+                f"0..{n_partitions - 1})")
         self.max_retries = max_retries
         self.sleep = sleep
         self.clock = clock if clock is not None else time.perf_counter
         self.nP = n_partitions
         self.S = S
+        self.sync_saves = sync_saves
+        self.rebalance = (rebalance if rebalance is not None
+                          else RebalancePolicy()).validate()
         self.mgr = None
         tel_path = None
         if checkpoint_dir is not None:
@@ -194,6 +265,9 @@ class _StageLoop:
         self.monitor = monitor if monitor is not None else \
             StragglerMonitor(n_partitions)
         self.widen_count = 0
+        self.rebalance_count = 0
+        self._flag_streak = 0
+        self._last_flagged: dict[int, float] = {}
 
     # ---- hooks a subclass provides -----------------------------------
     def rebalance_inputs(self):
@@ -209,6 +283,21 @@ class _StageLoop:
 
     def overflow_count(self, state: dict) -> int:
         raise NotImplementedError
+
+    # ---- elastic / rebalance hooks (distributed loop overrides) ------
+    def extra_leaves(self) -> dict:
+        """Layout-metadata leaves merged into every checkpoint save."""
+        return {}
+
+    def adapt_restored_state(self, state: dict, done: int):
+        """Map a restored checkpoint onto this run's layout.  The base
+        runner has no layout: just strip the ``meta/*`` leaves
+        ``extra_leaves`` may have added."""
+        return {k: v for k, v in state.items()
+                if not k.startswith("meta/")}, done
+
+    def _maybe_rebalance(self, stage: str, step: int, state: dict):
+        return state
 
     # ---- executor ----------------------------------------------------
     def _run_stage(self, stage: str, state: dict) -> dict:
@@ -231,12 +320,15 @@ class _StageLoop:
         self.tel.emit("stage_done", stage=stage,
                       step=STAGES.index(stage) + 1, wall_s=round(wall, 6),
                       per_partition_s=[round(t, 6) for t in times])
+        self._flag_streak = self._flag_streak + 1 if flagged else 0
+        self._last_flagged = dict(flagged)
         if flagged:
             self.tel.emit("straggler_flagged",
                           stage=stage, partitions={
                               str(p): round(r, 3)
                               for p, r in flagged.items()})
-            ri = self.rebalance_inputs()
+            ri = self.rebalance_inputs() \
+                if self.rebalance.mode != "off" else None
             if ri is not None:
                 edges = suggest_rebalance_edges(ri[0], ri[1], flagged,
                                                 self.nP)
@@ -250,11 +342,20 @@ class _StageLoop:
     def _save(self, step: int, stage: str, state: dict):
         if self.mgr is None:
             return
-        self.mgr.save(step, state)      # synchronous: durable before next
-        if self.injector.on_checkpoint_written(stage,
-                                               self.mgr.step_dir(step)):
-            self.tel.emit("checkpoint_corrupted_injected", stage=stage,
-                          step=step)
+        tree = dict(state)
+        tree.update(self.extra_leaves())
+        if self.sync_saves:
+            self.mgr.save(step, tree)
+        else:
+            # async: the save of step k overlaps stage k+1; every save /
+            # restore / injection point barriers through mgr.wait()
+            self.mgr.save_async(step, tree)
+        if self.injector.plan.corrupt_stage == stage:
+            self.mgr.wait()     # injection edits files: land them first
+            if self.injector.on_checkpoint_written(stage,
+                                                   self.mgr.step_dir(step)):
+                self.tel.emit("checkpoint_corrupted_injected", stage=stage,
+                              step=step)
 
     def _apply_overflow_policy(self, state, done):
         """Check the spill certificate once the cluster stage is in
@@ -290,11 +391,29 @@ class _StageLoop:
         return state, STAGES.index("segment") + 1
 
     def run(self):
+        try:
+            out = self._execute()
+        except BaseException:
+            # an in-flight async save must land even when the run dies:
+            # the resume point is defined by the last *completed* stage,
+            # and its checkpoint may still be on the writer thread
+            if self.mgr is not None:
+                try:
+                    self.mgr.wait()
+                except Exception as e:  # noqa: BLE001 — crash path
+                    log.warning("async save failed during crash: %s", e)
+            raise
+        if self.mgr is not None:
+            self.mgr.wait()     # surface async save errors before return
+        return out
+
+    def _execute(self):
         if self.mgr is not None:
             state, done, discarded = _restore_with_fallback(
                 self.mgr, self.on_corruption, self.tel)
         else:
             state, done, discarded = {}, 0, []
+        state, done = self.adapt_restored_state(state, done)
         resumed_from = done
         self.tel.emit("run_start", resumed_from_step=done,
                       plan_sim_mode=self.plan.sim_mode,
@@ -306,6 +425,7 @@ class _StageLoop:
             for step in range(done + 1, len(STAGES) + 1):
                 stage = STAGES[step - 1]
                 state = self._run_stage(stage, state)
+                state = self._maybe_rebalance(stage, step, state)
                 self._save(step, stage, state)
                 done = step
                 if stage == "cluster":
@@ -461,6 +581,8 @@ def run_resilient(batch, params, *, plan: EnginePlan | None = None,
                   fault_plan: FaultPlan | None = None,
                   max_retries: int = 3, sleep=None, clock=None,
                   monitor: StragglerMonitor | None = None,
+                  rebalance: RebalancePolicy | None = None,
+                  sync_saves: bool = False,
                   **legacy) -> ResilientResult:
     """Single-host resilient run; see the module docstring.
 
@@ -474,14 +596,16 @@ def run_resilient(batch, params, *, plan: EnginePlan | None = None,
                            on_overflow=on_overflow,
                            on_corruption=on_corruption,
                            fault_plan=fault_plan, max_retries=max_retries,
-                           sleep=sleep, clock=clock, monitor=monitor)
+                           sleep=sleep, clock=clock, monitor=monitor,
+                           rebalance=rebalance, sync_saves=sync_saves)
     state, resumed, discarded = loop.run()
     out = loop.to_output(state)
     return ResilientResult(output=out, sscr=float(out.sscr),
                            rmse=float(out.rmse), resumed_from=resumed,
                            widen_count=loop.widen_count,
                            fallback_steps=discarded,
-                           events=loop.tel.events)
+                           events=loop.tel.events,
+                           rebalance_count=loop.rebalance_count)
 
 
 # ===================================================================== #
@@ -490,16 +614,29 @@ def run_resilient(batch, params, *, plan: EnginePlan | None = None,
 
 
 class _DistributedLoop(_StageLoop):
-    def __init__(self, parts, params, mesh, part_axis, model_axis, **kw):
+    def __init__(self, parts, params, mesh, part_axis, model_axis,
+                 elastic_resume: bool = False, **kw):
         self.parts = parts
         self.params = params
         self.mesh = mesh
         self.part_axis = part_axis
         self.model_axis = model_axis
+        self.elastic_resume = bool(elastic_resume)
         nP = mesh.shape[part_axis]
+        self.nM = mesh.shape[model_axis]
         T = parts.x.shape[1]
         super().__init__(n_partitions=nP,
                          S=T * params.max_subtrajs_per_traj, **kw)
+        try:
+            self._layout = PointLayout.from_parts(parts)
+        except ValueError:
+            self._layout = None     # hand-built batch: no edges/src_m
+        if self.elastic_resume and self._layout is None:
+            raise ValueError(
+                "elastic_resume=True needs a PartitionedBatch produced "
+                "by partition_batch/repartition_batch (carrying "
+                "edges/src_m); a hand-built batch has no canonical "
+                "layout to adapt from")
         self.plan = self.plan.replace(sim_topk=self.current_k({}))
         self._build()
 
@@ -521,6 +658,120 @@ class _DistributedLoop(_StageLoop):
         part_of = np.broadcast_to(
             np.arange(pt.shape[0])[:, None, None], pt.shape)
         return pt[pv], part_of[pv]
+
+    # ---- elastic resume + adaptive repartitioning (DESIGN.md §11) ----
+    def extra_leaves(self):
+        if self._layout is None:
+            return {}
+        lay = self._layout
+        return {"meta/schema": np.int32(1),
+                "meta/edges": np.asarray(lay.edges, np.float64),
+                "meta/point_t": np.asarray(lay.t),
+                "meta/point_valid": np.asarray(lay.valid),
+                "meta/model_width": np.int32(self.nM)}
+
+    def _repartition_state(self, state, old, new):
+        out = {}
+        for k, v in state.items():
+            if k in _POINT_LEAVES:
+                out[k] = repartition(v, old, new, kind="point")
+            elif k in _CAND_IDX_LEAVES:
+                out[k] = repartition(v, old, new, kind="cand_idx")
+            else:
+                out[k] = v      # replicated table/* etc. — layout-free
+        return out
+
+    def adapt_restored_state(self, state, done):
+        meta = {k: np.asarray(v) for k, v in state.items()
+                if k.startswith("meta/")}
+        state = {k: v for k, v in state.items()
+                 if not k.startswith("meta/")}
+        if done == 0 or not meta or self._layout is None:
+            # pre-elastic checkpoint / hand-built batch: same-mesh
+            # resume only (shape mismatches surface downstream)
+            return state, done
+        old_edges = np.asarray(meta["meta/edges"], np.float64)
+        old_P = old_edges.shape[0] - 1
+        if old_P != self.nP and not self.elastic_resume:
+            raise ValueError(
+                f"checkpoint was written at P={old_P} but this mesh has "
+                f"P={self.nP}; pass elastic_resume=True "
+                "(--elastic-resume) to adapt it")
+        new = self._layout
+        old_mp = int(np.asarray(state["vote"]).shape[2])
+        old = PointLayout.from_global(meta["meta/point_t"],
+                                      meta["meta/point_valid"],
+                                      old_edges, Mp=old_mp)
+        if not old.same_points(new):
+            raise ValueError(
+                "elastic resume: the checkpoint's global point set "
+                "differs from this run's batch — refusing to mix runs")
+        if old.same_layout(new):
+            return state, done
+        old_nm = int(meta["meta/model_width"])
+        if old_nm != self.nM:
+            raise ValueError(
+                f"checkpoint was written with model-axis width {old_nm} "
+                f"but this mesh has {self.nM}; only the partition axis "
+                "is elastic")
+        if old.P == new.P:
+            # same partition count, different cut: a crash after an
+            # applied rebalance.  Adopt the checkpoint's layout (re-cut
+            # the batch at its edges) instead of repartitioning state —
+            # the later-stage partition-bound leaves stay valid, so no
+            # rewind is needed.
+            self.parts = repartition_batch(self.parts, old_edges)
+            self._layout = PointLayout.from_parts(self.parts)
+            if not self._layout.same_layout(old):
+                raise AssertionError("edge adoption did not converge")
+            self._build()
+            self.tel.emit("elastic_adopt_edges", step=done,
+                          edges=[float(e) for e in old_edges])
+            return state, done
+        # different partition count: fold the join/segment point state
+        # to global row space and re-cut it for this mesh.  Similarity
+        # onward is partition-bound (per-partition moments feed the
+        # alpha/k statistics), so rewind to the segment boundary.
+        new_done = min(done, STAGES.index("segment") + 1)
+        if new_done < done:
+            state = _drop_stage_keys(state, STAGES[new_done:])
+        state = self._repartition_state(state, old, new)
+        self.tel.emit("elastic_resume", from_partitions=old.P,
+                      to_partitions=new.P, from_step=done,
+                      to_step=new_done)
+        log.info("elastic resume: P=%d checkpoint (step %d) adapted to "
+                 "P=%d (step %d)", old.P, done, new.P, new_done)
+        return state, new_done
+
+    def _maybe_rebalance(self, stage, step, state):
+        pol = self.rebalance
+        if (pol.mode != "apply" or not self._last_flagged
+                or self._flag_streak < pol.consecutive
+                or self.rebalance_count >= pol.max_applies
+                or stage not in ("join", "segment")
+                or self._layout is None):
+            return state
+        times, part_of = self.rebalance_inputs()
+        edges = np.asarray(
+            suggest_rebalance_edges(times, part_of, self._last_flagged,
+                                    self.nP), np.float64)
+        old = self._layout
+        self.parts = repartition_batch(self.parts, edges)
+        self._layout = PointLayout.from_parts(self.parts)
+        state = self._repartition_state(state, old, self._layout)
+        self._build()
+        for p in range(self.nP):
+            self.monitor.reset(p)
+        self._flag_streak = 0
+        self._last_flagged = {}
+        self.rebalance_count += 1
+        self.tel.emit("rebalanced", stage=stage, step=step,
+                      applies=self.rebalance_count,
+                      edges=[float(e) for e in self._layout.edges])
+        log.info("rebalanced after %s at the straggler-weighted cut "
+                 "(apply %d/%d)", stage, self.rebalance_count,
+                 pol.max_applies)
+        return state
 
     # ---- stage bodies -------------------------------------------------
     def stage_join(self, state):
@@ -614,6 +865,9 @@ def run_resilient_distributed(parts, params, mesh, *,
                               fault_plan: FaultPlan | None = None,
                               max_retries: int = 3, sleep=None, clock=None,
                               monitor: StragglerMonitor | None = None,
+                              rebalance: RebalancePolicy | None = None,
+                              sync_saves: bool = False,
+                              elastic_resume: bool = False,
                               **legacy) -> ResilientResult:
     """Distributed resilient run over ``mesh``; see the module docstring.
 
@@ -630,11 +884,14 @@ def run_resilient_distributed(parts, params, mesh, *,
                             on_overflow=on_overflow,
                             on_corruption=on_corruption,
                             fault_plan=fault_plan, max_retries=max_retries,
-                            sleep=sleep, clock=clock, monitor=monitor)
+                            sleep=sleep, clock=clock, monitor=monitor,
+                            rebalance=rebalance, sync_saves=sync_saves,
+                            elastic_resume=elastic_resume)
     state, resumed, discarded = loop.run()
     out = loop.to_output(state)
     return ResilientResult(output=out, sscr=float(state["sscr"]),
                            rmse=float(state["rmse"]), resumed_from=resumed,
                            widen_count=loop.widen_count,
                            fallback_steps=discarded,
-                           events=loop.tel.events)
+                           events=loop.tel.events,
+                           rebalance_count=loop.rebalance_count)

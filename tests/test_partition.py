@@ -236,3 +236,116 @@ def test_partition_batch_matches_loop(seed):
     for g, w_, name in zip((got.x, got.y, got.t, got.valid), want,
                            ("x", "y", "t", "valid")):
         assert np.array_equal(np.asarray(g), w_), (seed, name)
+
+
+# ---------------------------------------------------------------------------
+# Canonical global form: PointLayout gather/scatter + repartition
+# (the elastic-resume substrate, DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+
+def _random_batch(seed, T=6, M=24):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0, 10, (T, M)).astype(np.float32)
+    y = rng.uniform(0, 10, (T, M)).astype(np.float32)
+    t = np.sort(rng.uniform(0, 50, (T, M)), axis=1).astype(np.float32)
+    v = rng.uniform(0, 1, (T, M)) > 0.25
+    v[:, 0] = True
+    return TrajectoryBatch(
+        x=jnp.asarray(x), y=jnp.asarray(y), t=jnp.asarray(t),
+        valid=jnp.asarray(v), traj_id=jnp.arange(T, dtype=jnp.int32))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_point_layout_gather_scatter_roundtrip(seed):
+    batch = _random_batch(seed)
+    parts = pz.partition_batch(batch, 4)
+    lay = pz.PointLayout.from_parts(parts)
+    # from_parts reconstructs the same layout from_global would build
+    lay2 = pz.PointLayout.from_global(np.asarray(batch.t),
+                                      np.asarray(batch.valid),
+                                      parts.edges, Mp=lay.Mp)
+    assert lay.same_layout(lay2)
+    assert np.array_equal(lay.src_m, lay2.src_m)
+    rng = np.random.default_rng(seed)
+    leaf = rng.normal(size=(4, lay.t.shape[0], lay.Mp, 3)) \
+        .astype(np.float32)
+    leaf[~np.asarray(parts.valid)] = 0.0
+    glob = pz.gather_global(leaf, lay)
+    back = lay.scatter(glob)
+    assert np.array_equal(back, leaf)
+    # gather places each slot at its recorded global row
+    pv = np.asarray(parts.valid)
+    assert glob[np.asarray(batch.valid)].shape[0] == int(pv.sum())
+
+
+@pytest.mark.parametrize("newP", [1, 2, 8])
+def test_repartition_point_leaf_preserves_global_rows(newP):
+    batch = _random_batch(7)
+    parts4 = pz.partition_batch(batch, 4)
+    old = pz.PointLayout.from_parts(parts4)
+    partsN = pz.partition_batch(batch, newP)
+    new = pz.PointLayout.from_parts(partsN)
+    rng = np.random.default_rng(7)
+    leaf = rng.normal(size=(4, old.t.shape[0], old.Mp)).astype(np.float32)
+    leaf[~np.asarray(parts4.valid)] = 0.0
+    moved = pz.repartition(leaf, old, new)
+    assert moved.shape == (newP, new.t.shape[0], new.Mp)
+    assert np.array_equal(pz.gather_global(moved, new),
+                          pz.gather_global(leaf, old))
+
+
+def test_repartition_cand_idx_tracks_global_identity():
+    """A candidate-index leaf (values index the local halo slab) keeps
+    pointing at the same *global* points after a re-cut."""
+    rng = np.random.default_rng(3)
+    T, M = 6, 24
+    # one shared time axis across rows, so the self-referencing
+    # candidates below stay inside the halo at every cut
+    t = np.broadcast_to(np.sort(rng.uniform(0, 50, M))
+                        .astype(np.float32), (T, M))
+    batch = TrajectoryBatch(
+        x=jnp.asarray(rng.uniform(0, 10, (T, M)).astype(np.float32)),
+        y=jnp.asarray(rng.uniform(0, 10, (T, M)).astype(np.float32)),
+        t=jnp.asarray(t), valid=jnp.ones((T, M), bool),
+        traj_id=jnp.arange(T, dtype=jnp.int32))
+    parts4 = pz.partition_batch(batch, 4)
+    old = pz.PointLayout.from_parts(parts4)
+    glob = np.broadcast_to(np.arange(M, dtype=np.int32)[None, :, None],
+                           (T, M, T)).copy()
+    leaf4 = old.scatter_cand_idx(glob)
+    assert np.array_equal(old.gather_cand_idx(leaf4)[np.asarray(
+        batch.valid)], glob[np.asarray(batch.valid)])
+    parts2 = pz.partition_batch(batch, 2)
+    new = pz.PointLayout.from_parts(parts2)
+    leaf2 = pz.repartition(leaf4, old, new, kind="cand_idx")
+    assert np.array_equal(new.gather_cand_idx(leaf2)[np.asarray(
+        batch.valid)], glob[np.asarray(batch.valid)])
+
+
+def test_repartition_batch_equals_fresh_partition():
+    """Re-cutting a partitioned batch at another cut's edges reproduces
+    partition_batch at those edges bit for bit — px/py/pt/pv/src_m."""
+    batch = _random_batch(11)
+    parts4 = pz.partition_batch(batch, 4)
+    parts2 = pz.partition_batch(batch, 2)
+    recut = pz.repartition_batch(parts4, parts2.edges)
+    for name in ("x", "y", "t", "valid", "src_m", "edges"):
+        assert np.array_equal(np.asarray(getattr(recut, name)),
+                              np.asarray(getattr(parts2, name))), name
+
+
+def test_repartition_rejects_mismatched_point_sets():
+    a = pz.PointLayout.from_parts(pz.partition_batch(_random_batch(0), 2))
+    b = pz.PointLayout.from_parts(pz.partition_batch(_random_batch(1), 2))
+    leaf = np.zeros((2, a.t.shape[0], a.Mp), np.float32)
+    with pytest.raises(ValueError, match="point sets"):
+        pz.repartition(leaf, a, b)
+
+
+def test_from_parts_requires_ingest_metadata():
+    parts = pz.partition_batch(_random_batch(0), 2)
+    import dataclasses as _dc
+    bare = _dc.replace(parts, edges=None, src_m=None)
+    with pytest.raises(ValueError, match="partition_batch"):
+        pz.PointLayout.from_parts(bare)

@@ -437,3 +437,170 @@ def test_launcher_recovers_after_faults(launcher_codes):
     assert launcher_codes["resume"] == EXIT_CODES["ok"]
     assert launcher_codes["resume_fallback"] == EXIT_CODES["ok"]
     assert launcher_codes["overflow_widen"] == EXIT_CODES["ok"]
+
+
+# -------------------------------------------- telemetry hardening (S2)
+
+
+def test_telemetry_schema_and_crash_parse(scenario, tmp_path):
+    """Kill mid-run; the fsynced JSONL must parse completely, and every
+    event carries the schema version."""
+    from repro.run import TELEMETRY_SCHEMA, read_telemetry
+    batch, params = scenario
+    root = tmp_path / "ckpt"
+    with pytest.raises(InjectedCrash):
+        run_resilient(batch, params, checkpoint_dir=root,
+                      fault_plan=FaultPlan(crash_at="cluster"))
+    events = read_telemetry(root / "telemetry.jsonl")
+    assert events and all(e["schema"] == TELEMETRY_SCHEMA for e in events)
+    assert [e for e in events if e["event"] == "stage_done"]
+
+
+def test_read_telemetry_tolerates_torn_tail(tmp_path):
+    from repro.run import read_telemetry
+    p = tmp_path / "telemetry.jsonl"
+    with open(p, "w") as f:
+        f.write(json.dumps({"schema": 1, "event": "a"}) + "\n")
+        f.write(json.dumps({"schema": 1, "event": "b"}) + "\n")
+        f.write('{"schema": 1, "event": "c", "tru')      # crash mid-write
+    events = read_telemetry(p)
+    assert [e["event"] for e in events] == ["a", "b"]
+
+
+def test_read_telemetry_rejects_mid_file_damage(tmp_path):
+    from repro.run import read_telemetry
+    p = tmp_path / "telemetry.jsonl"
+    with open(p, "w") as f:
+        f.write(json.dumps({"event": "a"}) + "\n")
+        f.write("garbage not json\n")
+        f.write(json.dumps({"event": "b"}) + "\n")
+    with pytest.raises(ValueError, match="line 2"):
+        read_telemetry(p)
+
+
+# ------------------------------------------------- async saves (S3)
+
+
+def test_sync_saves_escape_hatch_same_resume(scenario, reference,
+                                             tmp_path):
+    """Async (default) and synchronous checkpointing must leave
+    identical resume points and bit-identical outputs."""
+    batch, params = scenario
+    results = {}
+    for name, sync in (("async", False), ("sync", True)):
+        root = tmp_path / name
+        with pytest.raises(InjectedCrash):
+            run_resilient(batch, params, checkpoint_dir=root,
+                          fault_plan=FaultPlan(crash_at="cluster"),
+                          sync_saves=sync)
+        mgr = CheckpointManager(root)
+        assert mgr.available_steps() == [1, 2, 3], name
+        res = run_resilient(batch, params, checkpoint_dir=root,
+                            sync_saves=sync)
+        assert res.resumed_from == STAGES.index("cluster")
+        assert_bit_identical(res.output, reference)
+        results[name] = res
+    assert results["async"].sscr == results["sync"].sscr
+
+
+# ------------------------------- retry bounds + truncated leaves (S4)
+
+
+def test_retry_exact_attempt_count_on_exhaustion():
+    calls = {"n": 0}
+
+    def always():
+        calls["n"] += 1
+        raise TransientFault("persistent")
+
+    with pytest.raises(RetriesExhausted):
+        retry_with_backoff(always, max_retries=3, sleep=lambda s: None)
+    assert calls["n"] == 4              # 1 initial + max_retries retries
+
+
+def test_retry_zero_retries_fails_after_first_attempt():
+    calls = {"n": 0}
+
+    def always():
+        calls["n"] += 1
+        raise TransientFault("persistent")
+
+    with pytest.raises(RetriesExhausted):
+        retry_with_backoff(always, max_retries=0, sleep=lambda s: None)
+    assert calls["n"] == 1
+
+
+def test_injected_clock_drives_telemetry_timestamps(scenario):
+    batch, params = scenario
+    tick = {"n": 0}
+
+    def clock():
+        tick["n"] += 1
+        return float(tick["n"])
+
+    res = run_resilient(batch, params, clock=clock)
+    ts = [e["ts"] for e in res.events]
+    assert ts == sorted(ts) and all(float(t).is_integer() for t in ts)
+
+
+def test_truncated_checkpoint_leaf_detected_and_skipped(scenario,
+                                                        reference,
+                                                        tmp_path):
+    """A leaf file cut short (disk-full / partial write) must fail the
+    load — np.load or the CRC gate — and fallback must recover from the
+    previous step."""
+    batch, params = scenario
+    root = tmp_path / "ckpt"
+    run_resilient(batch, params, checkpoint_dir=root)
+    mgr = CheckpointManager(root)
+    last = mgr.available_steps()[-1]
+    leaves = sorted(mgr.step_dir(last).glob("leaf_*.npy"))
+    os.truncate(leaves[0], max(1, leaves[0].stat().st_size // 2))
+    with pytest.raises((IOError, EOFError, ValueError)):
+        load_checkpoint_flat(root, step=last)
+    res = run_resilient(batch, params, checkpoint_dir=root)
+    assert res.fallback_steps == [last]
+    assert res.resumed_from == last - 1
+    assert_bit_identical(res.output, reference)
+
+
+# ----------------------------------- FaultPlan/P validation (S1)
+
+
+def test_slow_partition_out_of_range_raises(scenario):
+    batch, params = scenario
+    with pytest.raises(ValueError, match="partition"):
+        run_resilient(batch, params,
+                      fault_plan=FaultPlan(slow=(("join", 3, 1.0),)))
+
+
+# ------------------------------------------------- RebalancePolicy api
+
+
+def test_rebalance_policy_roundtrip(tmp_path):
+    from repro.run import RebalancePolicy
+    pol = RebalancePolicy(mode="apply", consecutive=2, max_applies=3)
+    assert RebalancePolicy.from_json(pol.to_json()) == pol
+    p = tmp_path / "rebalance.json"
+    pol.save(p)
+    assert RebalancePolicy.load(p) == pol
+
+
+def test_rebalance_policy_validation():
+    from repro.run import RebalancePolicy
+    with pytest.raises(ValueError, match="mode"):
+        RebalancePolicy(mode="sometimes").validate()
+    with pytest.raises(ValueError, match="consecutive"):
+        RebalancePolicy(consecutive=0).validate()
+    with pytest.raises(ValueError, match="max_applies"):
+        RebalancePolicy(max_applies=-1).validate()
+    with pytest.raises(ValueError, match="unknown RebalancePolicy"):
+        RebalancePolicy.from_dict({"mode": "apply", "threshold": 2})
+
+
+def test_rebalance_policy_rejected_at_run_start(scenario):
+    from repro.run import RebalancePolicy
+    batch, params = scenario
+    with pytest.raises(ValueError, match="mode"):
+        run_resilient(batch, params,
+                      rebalance=RebalancePolicy(mode="bogus"))
