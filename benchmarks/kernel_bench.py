@@ -107,14 +107,14 @@ def bench_stjoin_pruned(smoke: bool = False, out_dir: str = ".") -> dict:
 def _cluster_engine_record(sim, table, params, iters: int = 3) -> dict:
     """Sequential-vs-round-parallel timings + parity for one instance."""
     from repro.core.clustering import cluster_rounds, cluster_sequential
+    from repro.tune.autotune import measure_compiled
     S = table.num_slots
-    seq_secs, res_seq = time_fn(
-        jax.jit(lambda s, t: cluster_sequential(s, t, params)),
-        sim, table, iters=iters)
-    rp_secs, (res_rp, rounds) = time_fn(
-        jax.jit(lambda s, t: cluster_rounds(s, t, params,
-                                            with_rounds=True)),
-        sim, table, iters=iters)
+    res_seq, seq_secs, _ = measure_compiled(
+        lambda s, t: cluster_sequential(s, t, params),
+        (sim, table), iters=iters)
+    (res_rp, rounds), rp_secs, _ = measure_compiled(
+        lambda s, t: cluster_rounds(s, t, params, with_rounds=True),
+        (sim, table), iters=iters)
     return {
         "S": S,
         "sequential_us": seq_secs * 1e6,
@@ -362,6 +362,140 @@ def bench_segmentation(w: int = 4, tau: float = 0.2, maxS: int = 8,
     return rec
 
 
+# Runs in a subprocess with 8 forced CPU devices: the parent may already
+# hold a differently-sized device pool (XLA device counts are fixed at
+# backend init).  Same idiom as tests/test_distributed.py.
+_COMM_DRIVER = r'''
+import json
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import numpy as np
+
+from repro.core.distributed import build_dsc_stage_programs
+from repro.core.partitioning import partition_batch
+from repro.core.plan import EnginePlan
+from repro.core.types import DSCParams
+from repro.data.synthetic import ais_like
+from repro.launch.hlo_analysis import collective_inventory
+
+batch, _ = ais_like(n_vessels=64, max_points=48, n_lanes=8, seed=0)
+maxS, K = 8, 32
+params = DSCParams(eps_sp=3.0, eps_t=600.0, delta_t=0.0, w=4, tau=0.2,
+                   alpha_sigma=-1.0, k_sigma=-1.0,
+                   max_subtrajs_per_traj=maxS, segmentation="tsa2")
+mesh = jax.make_mesh((1, 8), ("part", "model"))
+parts = partition_batch(batch, 1)
+
+def summarize(inv):
+    return {"by_kind": inv["by_kind"],
+            "total_payload_bytes": inv["total_payload_bytes"],
+            "peak_payload_bytes": inv["peak_payload_bytes"]}
+
+report = {"shape": {"T": batch.num_trajs, "M": batch.max_points,
+                    "S": batch.num_trajs * maxS, "K": K, "mesh": [1, 8]},
+          "modes": {}}
+labels = {}
+for name, hs, se in (("barrier", "barrier", "allgather"),
+                     ("ring", "ring", "ring")):
+    plan = EnginePlan(sim_mode="topk", sim_topk=K,
+                      halo_stream=hs, sim_exchange=se)
+    progs = build_dsc_stage_programs(parts, params, mesh, plan=plan)
+    p = parts
+    pts = (p.x, p.y, p.t, p.valid, p.traj_id, p.ranges)
+    join_hlo = progs["join"].lower(*pts).compile().as_text()
+    vote, masks, bw, bidx = progs["join"](*pts)
+    table, lab = progs["segment"](p.t, p.valid, vote, masks)
+    sim_args = pts + (lab, table, bw, bidx)
+    sim_hlo = progs["similarity"].lower(*sim_args).compile().as_text()
+    report["modes"][name] = {
+        "join": summarize(collective_inventory(join_hlo)),
+        "similarity": summarize(collective_inventory(sim_hlo)),
+    }
+    ids, sims, spill, degree, rsum, rsumsq, active = \
+        progs["similarity"](*sim_args)
+    member, msim, rep, outl, alpha, k, diag = progs["cluster"](
+        table, active, ids, sims, spill, degree, rsum, rsumsq)
+    final = progs["refine"](member, msim, rep, active, alpha, k)
+    labels[name] = tuple(np.asarray(getattr(final, f)).tolist()
+                         for f in ("member_of", "is_rep", "is_outlier"))
+
+report["labels_bit_identical"] = labels["barrier"] == labels["ring"]
+print("JSON" + json.dumps(report))
+'''
+
+
+def bench_comm() -> dict:
+    """Barrier vs ring communication schedules on a forced 8-device mesh.
+
+    Lowers the similarity and join stage programs at the fixed comm gate
+    shape (T=64, maxS=8 -> S=512, K=32, mesh 1x8 so the whole ring runs
+    on the model axis) under both schedules and inventories every
+    collective instruction's payload (``collective_inventory``).  The
+    deterministic gates: the ring-mode similarity HLO carries **zero**
+    ``all-gather`` / ``all-to-all`` instructions (the exchange is pure
+    ``collective-permute`` hops + the psum'd threshold moments), its peak
+    per-step payload is at least ``(nM - 1)x`` below the barrier
+    schedule's peak gather, and the staged pipeline's final labels are
+    bit-identical across schedules.  Wall-clock is not part of this
+    record at all — payload bytes are the hardware-independent signal.
+    """
+    import subprocess
+    import sys
+
+    import repro
+
+    src = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _COMM_DRIVER],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    assert proc.returncode == 0, (
+        f"comm driver failed:\n{proc.stdout}\n{proc.stderr}")
+    line = next(ln for ln in proc.stdout.splitlines()
+                if ln.startswith("JSON"))
+    rec = json.loads(line[len("JSON"):])
+
+    nM = rec["shape"]["mesh"][1]
+    ring_sim = rec["modes"]["ring"]["similarity"]
+    barrier_sim = rec["modes"]["barrier"]["similarity"]
+    rec["gates"] = {
+        "ring_devices": nM,
+        "ring_sim_allgather_ops":
+            ring_sim["by_kind"].get("all-gather", {}).get("count", 0),
+        "ring_sim_alltoall_ops":
+            ring_sim["by_kind"].get("all-to-all", {}).get("count", 0),
+        "barrier_peak_step_payload_bytes":
+            barrier_sim["peak_payload_bytes"],
+        "ring_peak_step_payload_bytes": ring_sim["peak_payload_bytes"],
+        "peak_step_payload_reduction_x": (
+            barrier_sim["peak_payload_bytes"]
+            / max(ring_sim["peak_payload_bytes"], 1)),
+        "labels_bit_identical": rec["labels_bit_identical"],
+    }
+    g = rec["gates"]
+    csv_row("comm_barrier_peak_step_payload",
+            g["barrier_peak_step_payload_bytes"],
+            f"total={barrier_sim['total_payload_bytes']}B")
+    csv_row("comm_ring_peak_step_payload",
+            g["ring_peak_step_payload_bytes"],
+            f"total={ring_sim['total_payload_bytes']}B;"
+            f"reduction={g['peak_step_payload_reduction_x']:.1f}x;"
+            f"identical={g['labels_bit_identical']}")
+    assert g["labels_bit_identical"], (
+        "ring schedule diverged from the barrier schedule's labels")
+    assert g["ring_sim_allgather_ops"] == 0, g
+    assert g["ring_sim_alltoall_ops"] == 0, g
+    assert g["peak_step_payload_reduction_x"] >= nM - 1, (
+        f"ring peak per-step payload reduction "
+        f"{g['peak_step_payload_reduction_x']:.1f}x is below the "
+        f"(devices - 1) = {nM - 1}x target")
+    return rec
+
+
 def bench_tuning(batch, params, out_dir: str = ".") -> dict:
     """Autotune the tile plans at the pipeline gate shape; record + gate.
 
@@ -443,9 +577,11 @@ def bench_pipeline(smoke: bool = False, out_dir: str = ".") -> dict:
     diverge.
     """
     from repro.core import similarity, voting
-    from repro.core.dsc import run_dsc
+    from repro.core.dsc import run_dsc_lowerable
+    from repro.core.plan import EnginePlan
     from repro.core.segmentation import tsa2
     from repro.kernels.stjoin.ops import subtrajectory_join
+    from repro.tune.autotune import measure_compiled
 
     batch = _clustered_workload(smoke)
     T, M = batch.num_trajs, batch.max_points
@@ -464,39 +600,47 @@ def bench_pipeline(smoke: bool = False, out_dir: str = ".") -> dict:
     ftiles = (fkw["rows"], fkw["bc"], fkw["bm"]) if fkw else None
 
     # ---- per-stage wall-clock ------------------------------------------
+    # measure_compiled throughout: one compile, a warm replay excluded,
+    # wall = min over timed replays — so the recorded numbers track the
+    # steady-state executable, not compile amortization or one-sided
+    # scheduler jitter (the old per-call medians moved 2x run to run).
+    iters = 3
     stages: dict[str, dict] = {"materialize": {}, "fused": {}}
 
-    join_fn = jax.jit(lambda b: subtrajectory_join(b, b, eps_sp, eps_t,
-                                                   delta_t))
-    join_secs, join = time_fn(join_fn, batch, iters=2)
+    join, join_secs, hlo_join = measure_compiled(
+        lambda b: subtrajectory_join(b, b, eps_sp, eps_t, delta_t),
+        (batch,), iters=iters)
     stages["materialize"]["join"] = join_secs * 1e6
-    consume = jax.jit(lambda j: (voting.point_voting(j),
-                                 voting.neighbor_mask_packed(j)))
-    c_secs, (vote, masks) = time_fn(consume, join, iters=2)
+    (vote, masks), c_secs, _ = measure_compiled(
+        lambda j: (voting.point_voting(j),
+                   voting.neighbor_mask_packed(j)),
+        (join,), iters=iters)
     stages["materialize"]["vote+masks"] = c_secs * 1e6
 
-    p1_secs, (f_vote, f_masks) = time_fn(
-        stjoin_vote_fused, batch, batch, eps_sp, eps_t, delta_t,
-        iters=2, **fkw)
+    (f_vote, f_masks), p1_secs, hlo_p1 = measure_compiled(
+        lambda b: stjoin_vote_fused(b, b, eps_sp, eps_t, delta_t, **fkw),
+        (batch,), iters=iters)
     stages["fused"]["join_pass1"] = p1_secs * 1e6
 
-    seg_fn = jax.jit(lambda m, v: tsa2(m, v, params.w, params.tau, maxS))
-    seg_secs, seg = time_fn(seg_fn, masks, batch.valid, iters=2)
+    seg, seg_secs, _ = measure_compiled(
+        lambda m, v: tsa2(m, v, params.w, params.tau, maxS),
+        (masks, batch.valid), iters=iters)
     stages["materialize"]["segment"] = stages["fused"]["segment"] = \
         seg_secs * 1e6
     table = similarity.build_subtraj_table(batch, seg, vote, maxS)
 
-    sim_fn = jax.jit(lambda j, s, t: similarity.similarity_matrix(
-        j, s, s.sub_local, t, maxS))
-    s_secs, sim_mat = time_fn(sim_fn, join, seg, table, iters=2)
+    sim_mat, s_secs, _ = measure_compiled(
+        lambda j, s, t: similarity.similarity_matrix(
+            j, s, s.sub_local, t, maxS),
+        (join, seg, table), iters=iters)
     stages["materialize"]["similarity"] = s_secs * 1e6
 
     def fused_sim(b, sub, t):
         raw = stjoin_sim_fused(b, b, sub, sub, maxS, eps_sp, eps_t,
                                delta_t, **fkw)
         return similarity.finalize_sim(raw, t)
-    f_secs, sim_fused = time_fn(fused_sim, batch, seg.sub_local, table,
-                                iters=2)
+    sim_fused, f_secs, _ = measure_compiled(
+        fused_sim, (batch, seg.sub_local, table), iters=iters)
     stages["fused"]["join_pass2+similarity"] = f_secs * 1e6
 
     # clustering stage: sequential O(S) claim loop vs the round-parallel
@@ -514,25 +658,31 @@ def bench_pipeline(smoke: bool = False, out_dir: str = ".") -> dict:
     S = clustering["S"]
 
     # ---- end-to-end + output parity ------------------------------------
-    e2e = {}
-    e2e["materialize_jnp_us"], out_ref = time_fn(
-        lambda: run_dsc(batch, params), iters=2)
-    e2e["materialize_kernel_us"], out_k = time_fn(
-        lambda: run_dsc(batch, params, use_kernel=True), iters=2)
-    e2e["fused_us"], out_f = time_fn(
-        lambda: run_dsc(batch, params, mode="fused", fused_tiles=ftiles),
-        iters=2)
-    e2e["seg_kernel_us"], out_sk = time_fn(
-        lambda: run_dsc(batch, params, seg_use_kernel=True), iters=2)
-    # retry disabled: an overflow at the benchmarked K must fail the gate
-    # loudly, not silently auto-widen past it
-    e2e["topk_us"], out_t = time_fn(
-        lambda: run_dsc(batch, params, sim_mode="topk",
-                        sim_topk_retry=False), iters=2)
-    e2e["topk_fused_us"], out_tf = time_fn(
-        lambda: run_dsc(batch, params, mode="fused", sim_mode="topk",
-                        fused_tiles=ftiles, sim_topk_retry=False), iters=2)
-    e2e = {k: v * 1e6 for k, v in e2e.items()}
+    # every variant through the traceable entry (run_dsc_lowerable): no
+    # host-side index planning and no top-K overflow retry, so an
+    # overflow at the benchmarked K still fails the gate loudly below
+    # instead of silently auto-widening past it
+    e2e_plans = {
+        "materialize_jnp_us": EnginePlan(),
+        "materialize_kernel_us": EnginePlan.from_legacy(use_kernel=True),
+        "fused_us": EnginePlan.from_legacy(mode="fused",
+                                           fused_tiles=ftiles),
+        "seg_kernel_us": EnginePlan.from_legacy(seg_use_kernel=True),
+        "topk_us": EnginePlan.from_legacy(sim_mode="topk"),
+        "topk_fused_us": EnginePlan.from_legacy(
+            mode="fused", sim_mode="topk", fused_tiles=ftiles),
+    }
+    e2e, e2e_out = {}, {}
+    for key, plan in e2e_plans.items():
+        e2e_out[key], wall, _ = measure_compiled(
+            lambda b, p=plan: run_dsc_lowerable(b, params, p),
+            (batch,), iters=iters)
+        e2e[key] = wall * 1e6
+    out_ref = e2e_out["materialize_jnp_us"]
+    out_f = e2e_out["fused_us"]
+    out_sk = e2e_out["seg_kernel_us"]
+    out_t = e2e_out["topk_us"]
+    out_tf = e2e_out["topk_fused_us"]
 
     # segmentation gate: bit-plane vs packed TSA2 (fixed W=8 instance)
     # plus e2e label/cut identity of the Pallas segmentation kernel path
@@ -575,16 +725,12 @@ def bench_pipeline(smoke: bool = False, out_dir: str = ".") -> dict:
     cube_elems = T * M * C
     cube_bytes = 2 * 4 * cube_elems          # f32 best_w + i32 best_idx
 
-    def hlo_of(fn, *args):
-        return jax.jit(fn).lower(*args).compile().as_text()
-
-    hlo_join = hlo_of(lambda b: subtrajectory_join(b, b, eps_sp, eps_t,
-                                                   delta_t), batch)
-    hlo_p1 = hlo_of(lambda b: stjoin_vote_fused(b, b, eps_sp, eps_t,
-                                                delta_t, **fkw), batch)
-    hlo_p2 = hlo_of(lambda b, s: stjoin_sim_fused(
-        b, b, s, s, maxS, eps_sp, eps_t, delta_t, **fkw),
-        batch, seg.sub_local)
+    # hlo_join / hlo_p1 come from the measure_compiled calls above (the
+    # identical traces); pass 2 is lowered bare (without finalize_sim) so
+    # its interface stats describe the kernel stage alone
+    hlo_p2 = jax.jit(lambda b, s: stjoin_sim_fused(
+        b, b, s, s, maxS, eps_sp, eps_t, delta_t, **fkw)).lower(
+        batch, seg.sub_local).compile().as_text()
 
     # HBM accounting: interface (parameter + output) buffers are what must
     # cross the stage boundary in HBM; interpret-mode loop temporaries are
@@ -622,6 +768,12 @@ def bench_pipeline(smoke: bool = False, out_dir: str = ".") -> dict:
     # winners verified bit-identical before acceptance (gated below)
     tuning = bench_tuning(batch, params, out_dir=out_dir)
 
+    # ring vs barrier communication schedules on a forced 8-device mesh
+    # (fixed gate shape, run in a subprocess — independent of this
+    # process's device pool; gates asserted inside bench_comm and
+    # re-asserted from the JSON record by CI)
+    comm = bench_comm()
+
     rec = {
         "workload": "ais_like clustered (lane-sorted rows)",
         "smoke": bool(smoke),
@@ -642,6 +794,7 @@ def bench_pipeline(smoke: bool = False, out_dir: str = ".") -> dict:
         "segmentation": segmentation,
         "similarity": sim_rec,
         "tuning": tuning,
+        "comm": comm,
     }
     for mode, st in stages.items():
         for stage, us in st.items():

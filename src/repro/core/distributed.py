@@ -39,6 +39,7 @@ resume bit-identity argument.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any
 
 import jax
@@ -54,14 +55,21 @@ from repro.core.plan import EnginePlan, resolve_plan
 from repro.core.refine import refine_states
 from repro.core.similarity import (build_subtraj_table_arrays, finalize_sim,
                                    finalize_sim_cols, largest_divisor,
-                                   merge_topk_blocks, sim_row_moments,
-                                   topk_overflow)
+                                   merge_topk_blocks, merge_topk_lists,
+                                   sim_row_moments, topk_overflow)
 from repro.core.voting import normalized_voting
 from repro.core.types import (ClusteringResult, DSCParams, JoinResult,
                               SubtrajTable, TopKSim)
 from repro.core.windows import pack_bits
 from repro.utils.compat import shard_map as shard_map_compat
 from repro.utils.tree import pytree_dataclass
+
+# stage-state donation is best-effort: when a stage's outputs can't alias
+# a donated input buffer XLA still frees it at call time (the memory win
+# the resilient loop wants) — silence the per-compile nag about the
+# unused alias
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
 
 
 @pytree_dataclass
@@ -78,6 +86,30 @@ def _nbr(x, axis, shift, n):
     """Slab from the partition at distance ``shift``; zeros at the edge."""
     perm = [(i, i + shift) for i in range(n) if 0 <= i + shift < n]
     return lax.ppermute(x, axis, perm)
+
+
+def _ring_gather(x, axis, n):
+    """Forwarding-ring ``all_gather``: ``n - 1`` ``ppermute`` hops, each
+    rank passing along the block it received last step, assembled into the
+    same ``[n, ...]`` stack ``lax.all_gather`` returns.
+
+    Pure data movement, so the result is bit-identical to the barrier
+    gather — but the per-step wire payload is a constant ``1/n`` of the
+    barrier payload, and because each landed block is a separate value in
+    the dataflow graph the consumer's compute on block ``s`` can overlap
+    the transfer of block ``s + 1`` (DESIGN.md §12)."""
+    if n == 1:
+        return x[None]
+    r = lax.axis_index(axis)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    out = jnp.zeros((n,) + x.shape, x.dtype)
+    out = lax.dynamic_update_index_in_dim(out, x, r, 0)
+    buf = x
+    for s in range(1, n):
+        buf = lax.ppermute(buf, axis, perm)
+        # after s forwarding hops the buffer holds rank (r - s)'s block
+        out = lax.dynamic_update_index_in_dim(out, buf, (r - s) % n, 0)
+    return out
 
 
 # largest-divisor tile sizing shares one implementation with the panel
@@ -171,6 +203,8 @@ class _DSCProgramBuilder:
         self.use_index = plan.use_index
         self.sim_strategy = plan.sim_strategy
         self.sim_dtype = plan.sim_dtype
+        self.halo_stream = plan.halo_stream
+        self.sim_exchange = plan.sim_exchange
         self.cluster_engine = plan.cluster_engine
         self.cluster_use_kernel = plan.cluster_use_kernel
         self.seg_use_kernel = plan.seg_use_kernel
@@ -199,6 +233,15 @@ class _DSCProgramBuilder:
         l = _nbr(arr, self.part_axis, +1, self.nP)
         r = _nbr(arr, self.part_axis, -1, self.nP)
         return l, r
+
+    def _gather_model(self, x, schedule):
+        """Model-axis gather under the named comm schedule — ``"barrier"``
+        / ``"allgather"`` is one ``lax.all_gather``, ``"ring"`` the
+        forwarding-ring twin (bit-identical stack, 1/nM per-step
+        payload)."""
+        if schedule == "ring":
+            return _ring_gather(x, self.model_axis, self.nM)
+        return lax.all_gather(x, self.model_axis)
 
     def _cand_slice(self):
         """(c0, slicer, per-rank traj-id slicer) for this model rank."""
@@ -250,13 +293,63 @@ class _DSCProgramBuilder:
         cy = jnp.concatenate([py, ly, ry], axis=1)
         ct = jnp.concatenate([pt, lt, rt], axis=1)
         cv = jnp.concatenate([pv, lv, rv], axis=1)
-        return cx, cy, ct, cv
+        # per-slab views, in concat order (own, left, right): the ring
+        # join schedule consumes these directly so the own-slab sweep has
+        # no dataflow edge to the neighbor ppermutes — compute on slab s
+        # overlaps the transfer of slab s+1
+        slabs = ((px, py, pt, pv), (lx, ly, lt, lv), (rx, ry, rt, rv))
+        return cx, cy, ct, cv, slabs
 
     # ---------------- phase 1: halo exchange + join ----------------
-    def phase_join(self, px, py, pt, pv, traj_id, cx, cy, ct, cv):
+    def _join_slab(self, px, py, pt, pv, ref_ids, cid, kx, ky, kt, kv, Mc):
+        """One best-match sweep of the candidate point arrays ``[Tc, Mc]``
+        — the full ``3Mp`` concat under the barrier schedule, one ``Mp``
+        slab at a time under the ring schedule."""
+        params, T, Mp, Tc = self.params, self.T, self.Mp, self.Tc
+        if self.use_kernel:
+            from repro.kernels import default_interpret
+            from repro.kernels.stjoin.stjoin import stjoin_pallas
+            return stjoin_pallas(
+                px.reshape(-1), py.reshape(-1), pt.reshape(-1),
+                ref_ids.astype(jnp.int32), pv.reshape(-1),
+                kx, ky, kt, cid, kv,
+                params.eps_sp, params.eps_t,
+                bp=_pick_block(T * Mp, 256), bc=_pick_block(Tc, 8),
+                bm=_pick_block(Mc, 128),
+                interpret=default_interpret())
+        from repro.kernels.stjoin.ref import stjoin_ref
+        pair_mask = None
+        if self.use_index:
+            from repro.index.grid import trajectory_pair_mask
+            pmask = trajectory_pair_mask(
+                px, py, pt, pv, kx, ky, kt, kv,
+                params.eps_sp, params.eps_t)               # [T, Tc]
+            pair_mask = jnp.repeat(pmask, Mp, axis=0)      # [T*Mp, Tc]
+        return stjoin_ref(
+            px.reshape(-1), py.reshape(-1), pt.reshape(-1),
+            ref_ids, pv.reshape(-1),
+            kx, ky, kt, cid, kv,
+            jnp.asarray(params.eps_sp, jnp.float32),
+            jnp.asarray(params.eps_t, jnp.float32),
+            pair_mask=pair_mask)
+
+    def phase_join(self, px, py, pt, pv, traj_id, cx, cy, ct, cv,
+                   slabs=None):
         """Returns ``(join, vote, masks)``; ``join`` is this rank's
         [T, Mp, Tc] column block, or None in fused mode.  The halo slabs
-        come from :meth:`halo_points` (computed once per program)."""
+        come from :meth:`halo_points` (computed once per program).
+
+        ``plan.halo_stream="ring"`` streams the materialize join one halo
+        slab at a time — the own-slab sweep runs while the neighbor slabs
+        are still in flight — and the running (best_w, best_idx) fold is
+        bit-identical to the concatenated sweep because the kernels'
+        argmax is first-occurrence under strict ``>`` updates, which is
+        invariant to how the candidate-point axis is chunked
+        (DESIGN.md §12).  Fused mode cannot decompose per slab (the
+        in-kernel delta_t run refine needs every candidate point of a
+        trajectory at once), so there the ring schedule instead streams
+        the phase's model-axis word/mask gathers.
+        """
         params, T, Mp, Tc = self.params, self.T, self.Mp, self.Tc
         c0, sl = self._cand_slice()
         cid = lax.dynamic_slice_in_dim(traj_id, c0, Tc, axis=0)
@@ -275,7 +368,7 @@ class _DSCProgramBuilder:
                 with_masks=params.segmentation == "tsa2", **self.tile_kw)
             vote = lax.psum(vote_l, self.model_axis)       # [T, Mp]
             if params.segmentation == "tsa2":
-                allw = lax.all_gather(words_l, self.model_axis)
+                allw = self._gather_model(words_l, self.halo_stream)
                 masks = jnp.moveaxis(allw, 0, 2).reshape(
                     T, Mp, self.nM * words_l.shape[-1])
             else:
@@ -283,33 +376,24 @@ class _DSCProgramBuilder:
             return join, vote, masks
 
         ref_ids = jnp.broadcast_to(traj_id[:, None], (T, Mp)).reshape(-1)
-        if self.use_kernel:
-            from repro.kernels import default_interpret
-            from repro.kernels.stjoin.stjoin import stjoin_pallas
-            bw, bidx = stjoin_pallas(
-                px.reshape(-1), py.reshape(-1), pt.reshape(-1),
-                ref_ids.astype(jnp.int32), pv.reshape(-1),
-                sl(cx), sl(cy), sl(ct), cid, sl(cv),
-                params.eps_sp, params.eps_t,
-                bp=_pick_block(T * Mp, 256), bc=_pick_block(Tc, 8),
-                bm=_pick_block(3 * Mp, 128),
-                interpret=default_interpret())
+        if self.halo_stream == "ring" and slabs is not None:
+            # slab-streamed join: fold each slab's sweep as it lands.
+            # Slab order mirrors the concat (own, left, right); strict
+            # ``>`` keeps the first occurrence of the running max, so the
+            # fold reproduces the concatenated argmax bit for bit.
+            bw = jnp.zeros((T * Mp, Tc), jnp.float32)
+            bidx = jnp.full((T * Mp, Tc), -1, jnp.int32)
+            for off, (sx, sy, st, sv) in zip((0, Mp, 2 * Mp), slabs):
+                w_s, i_s = self._join_slab(px, py, pt, pv, ref_ids, cid,
+                                           sl(sx), sl(sy), sl(st), sl(sv),
+                                           Mp)
+                better = w_s > bw
+                bidx = jnp.where(better, i_s + off, bidx)
+                bw = jnp.where(better, w_s, bw)
         else:
-            from repro.kernels.stjoin.ref import stjoin_ref
-            pair_mask = None
-            if self.use_index:
-                from repro.index.grid import trajectory_pair_mask
-                pmask = trajectory_pair_mask(
-                    px, py, pt, pv, sl(cx), sl(cy), sl(ct), sl(cv),
-                    params.eps_sp, params.eps_t)           # [T, Tc]
-                pair_mask = jnp.repeat(pmask, Mp, axis=0)  # [T*Mp, Tc]
-            bw, bidx = stjoin_ref(
-                px.reshape(-1), py.reshape(-1), pt.reshape(-1),
-                ref_ids, pv.reshape(-1),
-                sl(cx), sl(cy), sl(ct), cid, sl(cv),
-                jnp.asarray(params.eps_sp, jnp.float32),
-                jnp.asarray(params.eps_t, jnp.float32),
-                pair_mask=pair_mask)
+            bw, bidx = self._join_slab(px, py, pt, pv, ref_ids, cid,
+                                       sl(cx), sl(cy), sl(ct), sl(cv),
+                                       3 * Mp)
 
         join = JoinResult(best_w=bw.reshape(T, Mp, Tc),
                           best_idx=bidx.reshape(T, Mp, Tc))
@@ -323,7 +407,7 @@ class _DSCProgramBuilder:
 
         if params.segmentation == "tsa2":
             matched = join.best_w > 0.0                    # [T, Mp, Tc]
-            allm = lax.all_gather(matched, self.model_axis)
+            allm = self._gather_model(matched, self.halo_stream)
             allm = jnp.moveaxis(allm, 0, 2).reshape(T, Mp, self.nM * Tc)
             masks = pack_bits(allm)                        # [T, Mp, W]
         else:
@@ -467,28 +551,78 @@ class _DSCProgramBuilder:
         if self.sim_mode == "topk":
             K = min(self.sim_topk, S)
             raw_blk = rank_raw_block()                     # [S, S_loc]
-            # transpose-partner exchange: rank r sends raw[cols_k, cols_r]
-            # to rank k and assembles raw[cols_r, :] — the rows that
-            # max-symmetrize its own columns.  Each matrix byte crosses
-            # the interconnect exactly once.
-            a = raw_blk.reshape(self.nM, S_loc, S_loc)
-            a = lax.all_to_all(a, self.model_axis, split_axis=0,
-                               concat_axis=1)
-            tpart = a.reshape(S_loc, S)                    # raw[cols_r, :]
-            sym_blk = jnp.maximum(raw_blk, tpart.T)
+            if self.sim_exchange == "ring":
+                # shifted-ppermute transpose exchange: at step s every
+                # rank ships the [S_loc, S_loc] sub-block destined for
+                # rank (r + s) in one hop and max-folds the sub-block
+                # that just landed into its own band of ``sym``.  Each
+                # band is written exactly once with the same operands as
+                # the barrier all_to_all, so the fold is bit-identical —
+                # but every step's transfer overlaps the previous step's
+                # fold (DESIGN.md §12).
+                a = raw_blk.reshape(self.nM, S_loc, S_loc)
+                mrank = lax.axis_index(self.model_axis)
+
+                def fold(sym, src_rank, chunk):
+                    k0 = src_rank * S_loc
+                    band = lax.dynamic_slice_in_dim(raw_blk, k0, S_loc,
+                                                    axis=0)
+                    return lax.dynamic_update_slice_in_dim(
+                        sym, jnp.maximum(band, chunk.T), k0, axis=0)
+
+                sym_blk = fold(raw_blk, mrank,
+                               lax.dynamic_index_in_dim(a, mrank, 0,
+                                                        keepdims=False))
+                for s in range(1, self.nM):
+                    perm = [(i, (i + s) % self.nM) for i in range(self.nM)]
+                    chunk = lax.dynamic_index_in_dim(
+                        a, (mrank + s) % self.nM, 0, keepdims=False)
+                    sym_blk = fold(sym_blk, (mrank - s) % self.nM,
+                                   lax.ppermute(chunk, self.model_axis,
+                                                perm))
+            else:
+                # transpose-partner exchange: rank r sends raw[cols_k,
+                # cols_r] to rank k and assembles raw[cols_r, :] — the
+                # rows that max-symmetrize its own columns.  Each matrix
+                # byte crosses the interconnect exactly once.
+                a = raw_blk.reshape(self.nM, S_loc, S_loc)
+                a = lax.all_to_all(a, self.model_axis, split_axis=0,
+                                   concat_axis=1)
+                tpart = a.reshape(S_loc, S)                # raw[cols_r, :]
+                sym_blk = jnp.maximum(raw_blk, tpart.T)
             simb = finalize_sim_cols(sym_blk, c0s, table, active)
             cnt, rsum, rsumsq = moments_psum(simb)
-            # per-rank top-(K+1) of the exact column block, then a k-way
-            # merge of the gathered [S, K+1] lists — the only replicated
-            # similarity payload
+            # per-rank top-(K+1) of the exact column block ...
             kk = min(K + 1, S_loc)
             vals, idx_l = jax.lax.top_k(simb, kk)
             lids = c0s + idx_l
-            g_vals = lax.all_gather(vals, self.model_axis)  # [nM, S, kk]
-            g_ids = lax.all_gather(lids, self.model_axis)
-            m_vals = jnp.moveaxis(g_vals, 0, 1).reshape(S, self.nM * kk)
-            m_ids = jnp.moveaxis(g_ids, 0, 1).reshape(S, self.nM * kk)
-            ids, sims, spill = merge_topk_blocks(m_ids, m_vals, K)
+            if self.sim_exchange == "ring":
+                # ... streamed around the forwarding ring: fold each
+                # arriving rank's list into the standing top-(K+1) via
+                # the canonical pairwise merge.  Exact and
+                # order-invariant (``sort_topk_lists``), so the running
+                # merge equals the barrier k-way merge bit for bit while
+                # replacing the global [nM, S, K+1] gather with a
+                # constant [S, K+1] per-step payload.
+                perm = [(i, (i + 1) % self.nM) for i in range(self.nM)]
+                run_i, run_v = lids, vals
+                buf_i, buf_v = lids, vals
+                for s in range(1, self.nM):
+                    buf_v = lax.ppermute(buf_v, self.model_axis, perm)
+                    buf_i = lax.ppermute(buf_i, self.model_axis, perm)
+                    run_i, run_v = merge_topk_lists(
+                        run_i, run_v, buf_i, buf_v,
+                        min(K + 1, (s + 1) * kk))
+                ids, sims, spill = merge_topk_blocks(run_i, run_v, K)
+            else:
+                # barrier k-way merge of the gathered [S, K+1] lists —
+                # the only replicated similarity payload
+                g_vals = lax.all_gather(vals, self.model_axis)
+                g_ids = lax.all_gather(lids, self.model_axis)
+                m_vals = jnp.moveaxis(g_vals, 0, 1).reshape(
+                    S, self.nM * kk)
+                m_ids = jnp.moveaxis(g_ids, 0, 1).reshape(S, self.nM * kk)
+                ids, sims, spill = merge_topk_blocks(m_ids, m_vals, K)
             topk = TopKSim(ids=ids, sims=sims, spill=spill, degree=cnt,
                            row_sum=rsum, row_sumsq=rsumsq)
             return None, topk, None, active
@@ -497,7 +631,7 @@ class _DSCProgramBuilder:
             raw = rank_raw_block()
             if self.sim_dtype == "bf16":
                 raw = raw.astype(jnp.bfloat16)
-            gathered = lax.all_gather(raw, self.model_axis)  # [nM, S, S_loc]
+            gathered = self._gather_model(raw, self.sim_exchange)
             raw = jnp.moveaxis(gathered, 0, 1).reshape(S, S)
             raw = raw.astype(jnp.float32)
         else:
@@ -571,6 +705,8 @@ def build_dsc_program(
     seg_use_kernel: bool = False,    # Pallas TSA2 Jaccard kernel, phase 3
     sim_mode: str = "dense",        # "dense" | "topk" SP representation
     sim_topk: int | None = None,    # K of the top-K neighbor lists (32)
+    halo_stream: str = "barrier",   # "barrier" | "ring" join halo schedule
+    sim_exchange: str = "allgather",  # "allgather" | "ring" sim schedule
 ):
     """Build the shard_map program (not yet jitted) for ``parts`` shapes.
 
@@ -635,13 +771,27 @@ def build_dsc_program(
     ``sim_topk`` when nonzero — there is no in-graph retry).  Threshold
     moments psum per-rank row partials in both modes, so dense and topk
     resolve bit-identical alpha.  ``sim_strategy`` / ``sim_dtype`` only
-    shape the dense collective and are ignored under topk."""
+    shape the dense collective and are ignored under topk.
+
+    ``halo_stream="ring"`` / ``sim_exchange="ring"`` swap the phase
+    barriers for P-step ``ppermute`` ring schedules (DESIGN.md §12):
+    the materialize join folds one halo slab per step while the next is
+    in flight, the topk similarity exchange becomes a shifted-ppermute
+    transpose sweep plus a forwarding ring over the per-rank top-(K+1)
+    lists with a running canonical merge, and the dense ``allgather``
+    strategy assembles its column blocks around the forwarding ring.
+    Every ring schedule is bit-identical to its barrier twin; per-step
+    wire payloads shrink to 1/nM of the barrier gathers.  Fused mode
+    keeps the concatenated halo sweep (the in-kernel delta_t refine is
+    not slab-separable) and rings only its word/mask gathers; the dense
+    ``psum`` strategy is an all-reduce and ignores ``sim_exchange``."""
     plan = resolve_plan(plan, use_kernel=use_kernel, use_index=use_index,
                         mode=mode, sim_strategy=sim_strategy,
                         sim_dtype=sim_dtype, cluster_engine=cluster_engine,
                         cluster_use_kernel=cluster_use_kernel,
                         seg_use_kernel=seg_use_kernel, sim_mode=sim_mode,
-                        sim_topk=sim_topk)
+                        sim_topk=sim_topk, halo_stream=halo_stream,
+                        sim_exchange=sim_exchange)
     b = _DSCProgramBuilder(parts, params, mesh, part_axis, model_axis, plan)
 
     def body(px, py, pt, pv, traj_id, ranges):
@@ -649,9 +799,9 @@ def build_dsc_program(
         rng = ranges[0]                                   # [2]
 
         # phases 1-3
-        cx, cy, ct, cv = b.halo_points(px, py, pt, pv, rng)
+        cx, cy, ct, cv, slabs = b.halo_points(px, py, pt, pv, rng)
         join, vote, masks = b.phase_join(px, py, pt, pv, traj_id,
-                                         cx, cy, ct, cv)
+                                         cx, cy, ct, cv, slabs)
         table, labels = b.phase_segment(pt, pv, vote, masks)
         gid_own, gid_cat = b.gids(labels, pv, cv)
 
@@ -663,12 +813,20 @@ def build_dsc_program(
         alpha, k = res_l.alpha_used, res_l.k_used
 
         # ---------------- phase 6: cross-partition refinement -----------
-        g_member = lax.all_gather(res_l.member_of, part_axis)    # [nP, S]
-        g_sim = lax.all_gather(res_l.member_sim, part_axis)
-        g_rep = lax.all_gather(res_l.is_rep, part_axis)
-        g_active = lax.all_gather(active, part_axis)
+        # one packed-payload exchange instead of four separate gathers:
+        # member ids ride as bitcast f32 lanes (pure data movement —
+        # exact), booleans as 0.0/1.0, so the whole refinement state
+        # crosses the interconnect in a single [4, S] collective
+        packed = jnp.stack([
+            lax.bitcast_convert_type(res_l.member_of, jnp.float32),
+            res_l.member_sim,
+            res_l.is_rep.astype(jnp.float32),
+            active.astype(jnp.float32),
+        ])                                                       # [4, S]
+        g = lax.all_gather(packed, part_axis)                    # [nP, 4, S]
         final = refine_states(
-            g_member, g_sim, g_rep, g_active,
+            lax.bitcast_convert_type(g[:, 0], jnp.int32),
+            g[:, 1], g[:, 2] > 0.5, g[:, 3] > 0.5,
             lax.pmean(alpha, part_axis), lax.pmean(k, part_axis))
 
         return final, table, vote[None], active[None], diag[None]
@@ -734,15 +892,16 @@ def build_dsc_stage_programs(
 
     def join_body(px, py, pt, pv, traj_id, ranges):
         px, py, pt, pv = px[0], py[0], pt[0], pv[0]
-        cx, cy, ct, cv = b.halo_points(px, py, pt, pv, ranges[0])
+        cx, cy, ct, cv, slabs = b.halo_points(px, py, pt, pv, ranges[0])
         join, vote, masks = b.phase_join(px, py, pt, pv, traj_id,
-                                         cx, cy, ct, cv)
+                                         cx, cy, ct, cv, slabs)
         if join is None:
             return vote[None], masks[None]
         # gather the model-sharded column blocks to the full [T, Mp, T]
         # cube so the similarity stage can hand each rank its slice back
-        gw = lax.all_gather(join.best_w, model_axis)    # [nM, T, Mp, Tc]
-        gi = lax.all_gather(join.best_idx, model_axis)
+        # (ring-streamed under plan.halo_stream="ring", same bits)
+        gw = b._gather_model(join.best_w, plan.halo_stream)
+        gi = b._gather_model(join.best_idx, plan.halo_stream)
         bw = jnp.moveaxis(gw, 0, 2).reshape(b.T, b.Mp, b.T)
         bidx = jnp.moveaxis(gi, 0, 2).reshape(b.T, b.Mp, b.T)
         return vote[None], masks[None], bw[None], bidx[None]
@@ -756,15 +915,18 @@ def build_dsc_stage_programs(
         table, labels = b.phase_segment(pt[0], pv[0], vote[0], masks[0])
         return table, labels[None]
 
+    # the TSA2 mask cube is dead after segmentation — donating it keeps
+    # checkpoint-restored state single-resident (the resilient loop holds
+    # host copies, so donation never aliases a checkpoint reference)
     segment_fn = jax.jit(shard_map_compat(
         segment_body, mesh=mesh,
         in_specs=(part2, part2, part2, part3),
-        out_specs=(P(), part2)))
+        out_specs=(P(), part2)), donate_argnums=(3,))
 
     def similarity_body(px, py, pt, pv, traj_id, ranges, labels, table,
                         *cube):
         px, py, pt, pv = px[0], py[0], pt[0], pv[0]
-        cx, cy, ct, cv = b.halo_points(px, py, pt, pv, ranges[0])
+        cx, cy, ct, cv, _ = b.halo_points(px, py, pt, pv, ranges[0])
         if cube:
             c0, _ = b._cand_slice()
             join = JoinResult(
@@ -793,8 +955,12 @@ def build_dsc_stage_programs(
     sim_out = ((part2, part2, part1, part1, part1, part1, part1)
                if plan.sim_mode == "topk" else
                (part2, part1, part1, part1, part1))
+    # the join cube (the largest inter-stage buffer) is dead once the
+    # similarity stage has re-sliced it — donate both halves
+    sim_donate = () if plan.mode == "fused" else (8, 9)
     similarity_fn = jax.jit(shard_map_compat(
-        similarity_body, mesh=mesh, in_specs=sim_in, out_specs=sim_out))
+        similarity_body, mesh=mesh, in_specs=sim_in, out_specs=sim_out),
+        donate_argnums=sim_donate)
 
     def cluster_body(table, active, *state):
         if plan.sim_mode == "topk":
@@ -816,9 +982,13 @@ def build_dsc_stage_programs(
                               (part2, part1, part1, part1)))
     clu_out = (part1, part1, part1, part1, P(part_axis), P(part_axis),
                part1)
+    # the similarity state (dense [P, S, S] matrix or the top-K lists) is
+    # dead once clustered — donate all of it
+    clu_donate = tuple(range(2, len(clu_in)))
     cluster_fn = jax.jit(shard_map_compat(
-        cluster_body, mesh=mesh, in_specs=clu_in, out_specs=clu_out))
+        cluster_body, mesh=mesh, in_specs=clu_in, out_specs=clu_out),
+        donate_argnums=clu_donate)
 
     return {"join": join_fn, "segment": segment_fn,
             "similarity": similarity_fn, "cluster": cluster_fn,
-            "refine": jax.jit(refine_stage)}
+            "refine": jax.jit(refine_stage, donate_argnums=(0, 1, 2, 3))}

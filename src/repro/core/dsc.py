@@ -25,6 +25,7 @@ concrete (non-traced) inputs.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +38,12 @@ from repro.core.types import (ClusteringResult, DSCParams, JoinResult,
                               SubtrajSegmentation, SubtrajTable, TopKSim,
                               TrajectoryBatch)
 from repro.utils.tree import pytree_dataclass
+
+# stage-state donation is best-effort (see repro.core.distributed): when a
+# stage's outputs can't alias a donated buffer XLA still frees it at call
+# time; silence the per-compile nag about the unused alias
+warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable")
 
 
 @pytree_dataclass
@@ -244,31 +251,39 @@ def run_stage_vote_from_join(batch: TrajectoryBatch, params: DSCParams,
     return _vote_from_join_body(params, join)
 
 
-@functools.partial(jax.jit, static_argnames=("plan",))
+@functools.partial(jax.jit, static_argnames=("plan",),
+                   donate_argnums=(3,))
 def run_stage_segment(batch: TrajectoryBatch, params: DSCParams, vote,
                       masks, plan: EnginePlan):
-    """Stage 2: segmentation + subtrajectory table from the vote state."""
+    """Stage 2: segmentation + subtrajectory table from the vote state.
+    The packed TSA2 mask cube is donated — it is dead after this stage,
+    and the resilient loop holds host copies of all checkpoint state, so
+    donation never invalidates a checkpoint reference (DESIGN.md §12)."""
     return _segment_body(batch, params, vote, masks, plan)
 
 
-@functools.partial(jax.jit, static_argnames=("plan",))
+@functools.partial(jax.jit, static_argnames=("plan",),
+                   donate_argnums=(2,))
 def run_stage_similarity(batch: TrajectoryBatch, params: DSCParams, join,
                          seg: SubtrajSegmentation, table: SubtrajTable,
                          tile_ids, plan: EnginePlan):
     """Stage 3: SP relation — ``(sim, topk)``, exactly one non-None.
-    ``plan.sim_topk`` must be concrete (clamp K to S before calling)."""
+    ``plan.sim_topk`` must be concrete (clamp K to S before calling).
+    The join cube (the largest stage-state buffer) is donated."""
     return _similarity_body(batch, params, join, seg, table, plan,
                             tile_ids=tile_ids)
 
 
-@functools.partial(jax.jit, static_argnames=("plan",))
+@functools.partial(jax.jit, static_argnames=("plan",),
+                   donate_argnums=(0,))
 def run_stage_cluster(simlike, table: SubtrajTable, params: DSCParams,
                       plan: EnginePlan):
-    """Stage 4: clustering — ``(result, overflow)``."""
+    """Stage 4: clustering — ``(result, overflow)``; the similarity
+    state is donated (the score stage re-uploads from the host copy)."""
     return _cluster_body(simlike, table, params, plan)
 
 
-@jax.jit
+@functools.partial(jax.jit, donate_argnums=(1,))
 def run_stage_score(result: ClusteringResult, sim, params: DSCParams):
     """Stage 5 epilogue: ``(sscr, rmse)`` from the clustering state."""
     return _score_body(result, sim, params)

@@ -27,7 +27,11 @@ segmentation (P2)     ``seg_use_kernel`` (packed jnp engine vs the fused
                       Pallas Jaccard kernel — bit-identical cuts)
 similarity (SP)       ``sim_mode`` ("dense" | "topk"), ``sim_topk`` (K),
                       ``sim_panel`` (Sb panel height); distributed-only:
-                      ``sim_strategy``, ``sim_dtype``
+                      ``sim_strategy``, ``sim_dtype``, ``sim_exchange``
+                      ("allgather" barrier | "ring" streamed blocks)
+comm (DESIGN.md §12)  ``halo_stream`` ("barrier" gathers every neighbor
+                      slab up front | "ring" streams slabs and folds each
+                      contribution as it lands), ``sim_exchange`` (above)
 clustering (P3)       ``cluster_engine`` ("rounds" | "sequential"),
                       ``cluster_use_kernel``, round-kernel tiles
                       ``cluster_bu`` / ``cluster_bs``
@@ -48,6 +52,8 @@ _ENGINES = ("rounds", "sequential")
 _SIM_MODES = ("dense", "topk")
 _SIM_STRATEGIES = ("psum", "allgather")
 _SIM_DTYPES = ("f32", "bf16")
+_HALO_STREAMS = ("barrier", "ring")
+_SIM_EXCHANGES = ("allgather", "ring")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +80,9 @@ class EnginePlan:
     sim_panel: int | None = None       # panel height Sb (None = 128-snap)
     sim_strategy: str = "psum"         # distributed dense collective shape
     sim_dtype: str = "f32"             # distributed dense payload dtype
+    # ---- communication schedules (distributed-only) -----------------------
+    halo_stream: str = "barrier"       # join halo slabs: "barrier" | "ring"
+    sim_exchange: str = "allgather"    # similarity lists: "allgather" | "ring"
     # ---- clustering (Problem 3) ------------------------------------------
     cluster_engine: str = "rounds"     # "rounds" | "sequential"
     cluster_use_kernel: bool = False   # Pallas round-scan/claim-max kernels
@@ -98,6 +107,10 @@ class EnginePlan:
             raise ValueError(f"unknown sim_strategy {self.sim_strategy!r}")
         if self.sim_dtype not in _SIM_DTYPES:
             raise ValueError(f"unknown sim_dtype {self.sim_dtype!r}")
+        if self.halo_stream not in _HALO_STREAMS:
+            raise ValueError(f"unknown halo_stream {self.halo_stream!r}")
+        if self.sim_exchange not in _SIM_EXCHANGES:
+            raise ValueError(f"unknown sim_exchange {self.sim_exchange!r}")
         for name in ("fused_rows", "sim_topk", "sim_panel"):
             v = getattr(self, name)
             if v is not None and (not isinstance(v, int) or v < 1):
@@ -173,7 +186,9 @@ class EnginePlan:
                     sim_mode: str = "dense", sim_topk: int | None = None,
                     sim_panel: int | None = None,
                     sim_strategy: str = "psum",
-                    sim_dtype: str = "f32") -> "EnginePlan":
+                    sim_dtype: str = "f32",
+                    halo_stream: str = "barrier",
+                    sim_exchange: str = "allgather") -> "EnginePlan":
         """Materialize a plan from the deprecated per-stage flag set.
 
         This is the compatibility contract: every legacy flag combination
@@ -189,7 +204,8 @@ class EnginePlan:
                    cluster_use_kernel=cluster_use_kernel,
                    sim_mode=sim_mode, sim_topk=sim_topk, sim_panel=sim_panel,
                    sim_strategy=sim_strategy,
-                   sim_dtype=sim_dtype).validate()
+                   sim_dtype=sim_dtype, halo_stream=halo_stream,
+                   sim_exchange=sim_exchange).validate()
 
 
 _LEGACY_DEFAULTS = {
@@ -198,6 +214,7 @@ _LEGACY_DEFAULTS = {
     "cluster_engine": "rounds", "cluster_use_kernel": False,
     "sim_mode": "dense", "sim_topk": None, "sim_panel": None,
     "sim_strategy": "psum", "sim_dtype": "f32",
+    "halo_stream": "barrier", "sim_exchange": "allgather",
 }
 
 

@@ -336,6 +336,37 @@ def topk_from_dense(sim: jnp.ndarray, table: SubtrajTable, k: int,
                    row_sum=rsum, row_sumsq=rsumsq)
 
 
+def sort_topk_lists(ids: jnp.ndarray, sims: jnp.ndarray, kk: int):
+    """Canonical top-``kk`` of candidate lists: sort rows by the total
+    order (sim descending, id ascending) and truncate.
+
+    The two-key ``lax.sort`` makes the result a function of the *set* of
+    ``(id, sim)`` pairs alone — independent of column order, block
+    splits, or merge grouping — because distinct ids make the order
+    total.  That set-function property is what lets the ring similarity
+    sweep fold blocks into a running list one step at a time and still
+    match the barrier k-way merge bit for bit (DESIGN.md §12), and it is
+    pinned by the hypothesis suite in ``tests/test_topk_sim.py``.
+
+    ``sims`` must be non-negative (similarity values) and ids distinct
+    within a row; returns ``(ids [S, kk], sims [S, kk])`` untruncated by
+    sign — masking to ``(id=-1, sim=0)`` stays in ``_topk_tail``.
+    """
+    neg_s, ids_s = jax.lax.sort((-sims, ids), dimension=-1, num_keys=2)
+    kk = min(kk, sims.shape[1])
+    return ids_s[:, :kk], -neg_s[:, :kk]
+
+
+def merge_topk_lists(ids_a, sims_a, ids_b, sims_b, kk: int):
+    """Pairwise canonical merge — one ring step: fold the list that just
+    arrived into the standing top-``kk``.  Exact because the top-``kk``
+    of a union is contained in the union of the operands' top-``kk``
+    lists (selection containment), and canonical because
+    ``sort_topk_lists`` is."""
+    return sort_topk_lists(jnp.concatenate([ids_a, ids_b], axis=1),
+                           jnp.concatenate([sims_a, sims_b], axis=1), kk)
+
+
 def merge_topk_blocks(ids: jnp.ndarray, sims: jnp.ndarray, k: int):
     """K-way merge of per-block top-(K+1) lists into global top-K + spill.
 
@@ -343,11 +374,15 @@ def merge_topk_blocks(ids: jnp.ndarray, sims: jnp.ndarray, k: int):
     lists (disjoint column ranges, exact values).  The global top-(K+1)
     of a row is always contained in the union of its blocks' top-(K+1)
     lists, so the merged top-K and the merged (K+1)-th value (the spill
-    certificate) are exactly those of the full row.
+    certificate) are exactly those of the full row.  Ordering is the
+    canonical (sim desc, id asc) total order of ``sort_topk_lists`` —
+    for the distributed barrier caller this coincides with the historic
+    position-stable ``lax.top_k`` tie-break, because rank-major concat
+    of per-rank ``top_k`` lists already places equal values in ascending
+    global-id order.
     """
-    kk = min(k + 1, sims.shape[1])
-    vals, pos = jax.lax.top_k(sims, kk)
-    return _topk_tail(vals, jnp.take_along_axis(ids, pos, axis=1), k)
+    mi, ms = sort_topk_lists(ids, sims, min(k + 1, sims.shape[1]))
+    return _topk_tail(ms, mi, k)
 
 
 def topk_overflow(topk: TopKSim, alpha) -> jnp.ndarray:

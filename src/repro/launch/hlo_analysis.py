@@ -327,6 +327,53 @@ def collective_bytes(hlo_text: str) -> dict:
     return out
 
 
+def collective_inventory(hlo_text: str) -> dict:
+    """Per-instruction collective accounting of one compiled module.
+
+    Where :func:`analyze_hlo` reports loop-corrected *bytes moved* (an
+    all-reduce counts 2x), this reports the raw **payload** of every
+    collective instruction in the text — the output buffer each op
+    produces — which is what the comm-schedule gates compare: a barrier
+    ``all-gather`` materializes the full ``[P, ...]`` stack in one step,
+    while a ring schedule's ``collective-permute`` hops each carry a
+    ``1/P`` block.  Ring schedules are Python-unrolled (one HLO
+    instruction per hop), so no trip correction applies; ``*-start`` ops
+    are counted once and their ``*-done`` halves skipped.
+
+    Returns ``{"ops": [{"kind", "dtype", "shape", "payload_bytes"}...],
+    "by_kind": {kind: {"count", "payload_bytes", "peak_payload_bytes"}},
+    "total_payload_bytes", "peak_payload_bytes"}``.
+    """
+    ops: list[dict] = []
+    for raw in hlo_text.splitlines():
+        dm = _DEF_RE.match(raw.strip())
+        if not dm:
+            continue
+        op = dm.group(3)
+        kind = next((c for c in _COLLECTIVES
+                     if op == c or op == c + "-start"), None)
+        if kind is None:
+            continue
+        for b in _type_buffers(dm.group(2)):
+            ops.append({"kind": kind, "dtype": b["dtype"],
+                        "shape": b["shape"], "payload_bytes": b["bytes"]})
+    by_kind: dict[str, dict] = {}
+    for o in ops:
+        e = by_kind.setdefault(o["kind"], {"count": 0, "payload_bytes": 0,
+                                           "peak_payload_bytes": 0})
+        e["count"] += 1
+        e["payload_bytes"] += o["payload_bytes"]
+        e["peak_payload_bytes"] = max(e["peak_payload_bytes"],
+                                      o["payload_bytes"])
+    return {
+        "ops": ops,
+        "by_kind": by_kind,
+        "total_payload_bytes": sum(o["payload_bytes"] for o in ops),
+        "peak_payload_bytes": max((o["payload_bytes"] for o in ops),
+                                  default=0),
+    }
+
+
 # ---------------------------------------------------------------------------
 # Buffer-assignment inspection: which arrays does a compiled program actually
 # hold?  Used by benchmarks/kernel_bench.py to verify that the fused join

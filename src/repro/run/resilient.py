@@ -300,6 +300,13 @@ class _StageLoop:
         return state
 
     # ---- executor ----------------------------------------------------
+    def _comm_schedule(self) -> dict:
+        """The active communication schedules (DESIGN.md §12), stamped on
+        every straggler-relevant telemetry event so a trace can correlate
+        per-partition timings with the collective schedule in force."""
+        return {"halo_stream": self.plan.halo_stream,
+                "sim_exchange": self.plan.sim_exchange}
+
     def _run_stage(self, stage: str, state: dict) -> dict:
         def attempt():
             self.injector.on_stage_enter(stage)
@@ -319,14 +326,16 @@ class _StageLoop:
         flagged = self.monitor.check()
         self.tel.emit("stage_done", stage=stage,
                       step=STAGES.index(stage) + 1, wall_s=round(wall, 6),
-                      per_partition_s=[round(t, 6) for t in times])
+                      per_partition_s=[round(t, 6) for t in times],
+                      comm=self._comm_schedule())
         self._flag_streak = self._flag_streak + 1 if flagged else 0
         self._last_flagged = dict(flagged)
         if flagged:
             self.tel.emit("straggler_flagged",
                           stage=stage, partitions={
                               str(p): round(r, 3)
-                              for p, r in flagged.items()})
+                              for p, r in flagged.items()},
+                          comm=self._comm_schedule())
             ri = self.rebalance_inputs() \
                 if self.rebalance.mode != "off" else None
             if ri is not None:
@@ -336,7 +345,14 @@ class _StageLoop:
                               stage=stage, edges=[
                                   float(e) for e in edges])
         state = dict(state)
-        state.update(updates)
+        # land every stage output as a HOST copy before it enters the
+        # loop state: the stage entry points donate their dead inputs
+        # (DESIGN.md §12), and a donated device buffer must never alias a
+        # checkpoint leaf (the async save of step k overlaps stage k+1)
+        # or a leaf a later stage re-reads (the single-host score stage
+        # re-uses the dense sim the cluster stage donates).  numpy inputs
+        # are always safely donatable: jit uploads a fresh device copy.
+        state.update({k: np.asarray(v) for k, v in updates.items()})
         return state
 
     def _save(self, step: int, stage: str, state: dict):
@@ -767,7 +783,8 @@ class _DistributedLoop(_StageLoop):
         self.rebalance_count += 1
         self.tel.emit("rebalanced", stage=stage, step=step,
                       applies=self.rebalance_count,
-                      edges=[float(e) for e in self._layout.edges])
+                      edges=[float(e) for e in self._layout.edges],
+                      comm=self._comm_schedule())
         log.info("rebalanced after %s at the straggler-weighted cut "
                  "(apply %d/%d)", stage, self.rebalance_count,
                  pol.max_applies)

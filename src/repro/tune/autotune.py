@@ -439,6 +439,60 @@ def tune_sim_panel(src, dst, w, table, params,
                  measure, verify, store=store)
 
 
+def comm_candidates(base: EnginePlan) -> list[EnginePlan]:
+    """Comm-schedule candidates (DESIGN.md §12): candidate 0 is the
+    barrier baseline — the tuner's no-regression anchor — then each ring
+    schedule alone, then both.  Unlike tile geometries, ring and barrier
+    schedules are bit-identical by construction, so a verification
+    failure here is a real bug, not a rejected candidate."""
+    barrier = base.replace(halo_stream="barrier", sim_exchange="allgather")
+    cands = [barrier]
+    for hs, se in (("ring", "allgather"), ("barrier", "ring"),
+                   ("ring", "ring")):
+        p = barrier.replace(halo_stream=hs, sim_exchange=se)
+        if p not in cands:
+            cands.append(p)
+    return cands
+
+
+def tune_comm(parts, params, mesh, *, part_axis: str = "part",
+              model_axis: str = "model", base: EnginePlan | None = None,
+              candidates: list[EnginePlan] | None = None,
+              store: PlanStore | None = None, iters: int = 1) -> TuneResult:
+    """Tune the distributed communication schedules on a live mesh.
+
+    Each candidate compiles the full distributed monolith once
+    (``halo_stream`` / ``sim_exchange`` are plan fields, hence jit static
+    keys — one trace per schedule).  Verification is final-label
+    bit-identity against candidate 0, the barrier baseline: a ring
+    schedule is a pure reordering of the same data movement, so anything
+    short of bit-identical labels is rejected.  The interface-bytes
+    primary key ties across schedules (the program boundary is
+    unchanged); wall-clock — where overlap actually shows up — breaks
+    the tie, with candidate order keeping the result deterministic.
+    """
+    from repro.core.distributed import build_dsc_program
+    base = (base or EnginePlan()).validate()
+    if candidates is None:
+        candidates = comm_candidates(base)
+    args = (parts.x, parts.y, parts.t, parts.valid, parts.traj_id,
+            parts.ranges)
+
+    def measure(plan):
+        prog = build_dsc_program(parts, params, mesh, part_axis=part_axis,
+                                 model_axis=model_axis, plan=plan)
+        return measure_compiled(prog, args, iters=iters)
+
+    oracle_final = measure(candidates[0])[0][0]
+
+    def verify(out, plan):
+        return _labels_equal(out[0], oracle_final)
+
+    bucket = shape_bucket(T=parts.x.shape[1], P=mesh.shape[part_axis],
+                          M=mesh.shape[model_axis])
+    return sweep("comm", bucket, candidates, measure, verify, store=store)
+
+
 def tune_pipeline(batch, params, base: EnginePlan | None = None,
                   store: PlanStore | None = None,
                   iters: int = 1):

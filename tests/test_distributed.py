@@ -120,6 +120,34 @@ _DRIVER = textwrap.dedent("""
             and (np.asarray(out_t.result.is_rep) == is_rep).all()
             and (np.asarray(out_t.result.is_outlier) == is_out).all())
 
+    # ring-pipelined collectives: the P-step ppermute schedules must be
+    # bit-identical to their barrier twins on every label field, for the
+    # dense and the top-K similarity paths, materializing and fused
+    ring_cells = (
+        ("p4_ring_dense", dict(halo_stream="ring"), out),
+        ("p4_ring_dense_simring", dict(halo_stream="ring",
+                                       sim_exchange="ring"), out),
+        ("p4_ring_topk", dict(sim_mode="topk", sim_topk=48,
+                              halo_stream="ring", sim_exchange="ring"),
+         out),                 # barrier top-K == dense (asserted above)
+        ("p4_ring_fused", dict(mode="fused", halo_stream="ring"), out_f),
+    )
+    for key, kw, twin in ring_cells:
+        out_r = run_dsc_distributed(parts, params, mesh, **kw)
+        report[key + "_agree"] = bool(all(
+            (np.asarray(getattr(out_r.result, f))
+             == np.asarray(getattr(twin.result, f))).all()
+            for f in ("member_of", "member_sim", "is_rep", "is_outlier")))
+
+    # the comm-schedule autotuner sweep: all four schedule candidates
+    # must verify bit-identical against the barrier oracle, and the
+    # winner must be a verified candidate
+    from repro.tune.autotune import tune_comm
+    tr = tune_comm(parts, params, mesh)
+    report["comm_sweep_candidates"] = len(tr.candidates)
+    report["comm_sweep_verified"] = sum(c.verified for c in tr.candidates)
+    report["comm_winner_verified"] = bool(tr.winner.verified)
+
     print("JSON" + json.dumps(report))
 """)
 
@@ -198,6 +226,27 @@ def test_p4_topk_sim_identical(dist_report):
     for key in ("p4_topk", "p4_topk_fused"):
         assert dist_report[key + "_overflow"] == 0
         assert dist_report[key + "_agree"]
+
+
+@pytest.mark.distributed
+@pytest.mark.slow
+def test_p4_ring_schedules_identical(dist_report):
+    """halo_stream="ring" / sim_exchange="ring" (P-step ppermute schedules,
+    DESIGN.md §12) are bit-identical to their barrier twins on every label
+    field — dense and top-K similarity, materializing and fused."""
+    for key in ("p4_ring_dense", "p4_ring_dense_simring", "p4_ring_topk",
+                "p4_ring_fused"):
+        assert dist_report[key + "_agree"], key
+
+
+@pytest.mark.distributed
+@pytest.mark.slow
+def test_comm_schedule_sweep_all_verified(dist_report):
+    """tune_comm: every barrier/ring schedule candidate verifies
+    bit-identical against the barrier oracle; the winner is verified."""
+    assert dist_report["comm_sweep_candidates"] == 4
+    assert dist_report["comm_sweep_verified"] == 4
+    assert dist_report["comm_winner_verified"]
 
 
 def test_partitioning_is_equi_depth():

@@ -142,6 +142,35 @@ _DRIVER = textwrap.dedent("""
     report["adopt_events"] = len(ad_events)
     report["adopt_agree"] = same(sig(res_ad), sig(res_rb))
 
+    # ring comm schedules under kill-and-resume: a ring-plan run crashed
+    # at the similarity boundary on a (4, 2) mesh resumes elastically on
+    # (2, 2) — the ring similarity exchange reruns on the new mesh — and
+    # stays bit-identical to the barrier plan's straight-through run;
+    # telemetry events carry the active comm schedule
+    ring_kw = dict(sim_mode="topk", sim_topk=48, halo_stream="ring",
+                   sim_exchange="ring")
+    mesh42 = jax.make_mesh((4, 2), ("part", "model"))
+    mesh22 = jax.make_mesh((2, 2), ("part", "model"))
+    oracle_ring = sig(run_resilient_distributed(
+        partition_batch(batch, 2), params, mesh22,
+        sim_mode="topk", sim_topk=48))          # barrier twin
+    ringroot = f"{tmp}/ring"
+    try:
+        run_resilient_distributed(
+            partition_batch(batch, 4), params, mesh42,
+            checkpoint_dir=ringroot,
+            fault_plan=FaultPlan(crash_at="similarity"), **ring_kw)
+    except InjectedCrash:
+        pass
+    res_ring = run_resilient_distributed(
+        partition_batch(batch, 2), params, mesh22,
+        checkpoint_dir=ringroot, elastic_resume=True, **ring_kw)
+    report["ring_elastic_agree"] = same(sig(res_ring), oracle_ring)
+    report["ring_elastic_from"] = res_ring.resumed_from
+    done = [e for e in read_telemetry(ringroot + "/telemetry.jsonl")
+            if e["event"] == "stage_done"]
+    report["ring_telemetry_comm"] = done[0].get("comm") if done else None
+
     # rebalance mode="off" emits neither suggestions nor applications
     res_off = run_resilient_distributed(
         parts4, params, mesh_for(4), fault_plan=slow,
@@ -201,6 +230,17 @@ def test_rebalance_apply_matches_oracle_cut(report):
 def test_resume_after_rebalance_adopts_edges(report):
     assert report["adopt_events"] == 1
     assert report["adopt_agree"]
+
+
+def test_ring_elastic_resume_bit_identity(report):
+    """Ring comm schedules survive kill-and-resume across meshes: the
+    (4, 2) ring-plan checkpoint resumed on (2, 2) reruns the ring
+    similarity exchange and matches the barrier twin bit for bit, and
+    telemetry is tagged with the active comm schedule."""
+    assert report["ring_elastic_from"] == _STAGES.index("similarity")
+    assert report["ring_elastic_agree"]
+    assert report["ring_telemetry_comm"] == {"halo_stream": "ring",
+                                             "sim_exchange": "ring"}
 
 
 def test_rebalance_off_is_silent(report):

@@ -219,6 +219,66 @@ def test_fused_panel_kernel_orientations_bitwise():
 
 
 # ---------------------------------------------------------------------------
+# Ring-merge algebra (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_topk_merge_split_and_order_invariant(seed):
+    """The ring fold's algebra: for distinct-id candidate lists the
+    canonical merge is a set function of the (id, sim) pairs — any
+    contiguous column-block split, any block permutation, and any
+    pairwise merge grouping (left fold or random binary tree) yield
+    bit-identical [S, K] id/sim lists *and* spill certificate.  This is
+    the property that makes the ring similarity sweep's running
+    one-block-at-a-time fold exact against the barrier k-way merge."""
+    from repro.core.similarity import (merge_topk_blocks, merge_topk_lists,
+                                       sort_topk_lists)
+    rng = np.random.default_rng(seed)
+    S, N, K = 7, 40, 5
+    kk = K + 1
+    # distinct ids per row (a permutation), sims nonnegative with zeros —
+    # the (id=-1, sim=0) masking edge and the spill tail are both hit
+    ids = jnp.asarray(np.stack([rng.permutation(N) for _ in range(S)])
+                      .astype(np.int32))
+    sims = np.asarray(rng.uniform(0, 1, (S, N)), np.float32)
+    sims = jnp.asarray(sims * (rng.uniform(0, 1, (S, N)) > 0.3))
+    ref = merge_topk_blocks(ids, sims, K)
+
+    def check(got, ctx):
+        for name, a, b in zip(("ids", "sims", "spill"), got, ref):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                seed, ctx, name)
+
+    for trial in range(3):
+        ncuts = int(rng.integers(1, 6))
+        cuts = np.sort(rng.choice(np.arange(1, N), ncuts, replace=False))
+        # each block pre-truncated to its own canonical top-(K+1) — what
+        # every rank ships on the ring (selection containment keeps the
+        # global top-(K+1), hence the spill, exact)
+        blocks = [sort_topk_lists(ids[:, a:b], sims[:, a:b], kk)
+                  for a, b in zip([0, *cuts], [*cuts, N])]
+        order = [int(j) for j in rng.permutation(len(blocks))]
+
+        ci = jnp.concatenate([blocks[j][0] for j in order], axis=1)
+        cs = jnp.concatenate([blocks[j][1] for j in order], axis=1)
+        check(merge_topk_blocks(ci, cs, K), f"concat trial={trial}")
+
+        fi, fs = blocks[order[0]]
+        for j in order[1:]:
+            fi, fs = merge_topk_lists(fi, fs, *blocks[j], kk)
+        check(merge_topk_blocks(fi, fs, K), f"fold trial={trial}")
+
+        work = [blocks[j] for j in order]
+        while len(work) > 1:
+            i = int(rng.integers(0, len(work) - 1))
+            a, b = work.pop(i), work.pop(i)
+            work.insert(i, merge_topk_lists(a[0], a[1], b[0], b[1], kk))
+        check(merge_topk_blocks(*work[0], K), f"tree trial={trial}")
+
+
+# ---------------------------------------------------------------------------
 # End-to-end pipeline parity
 # ---------------------------------------------------------------------------
 
