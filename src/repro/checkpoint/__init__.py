@@ -1,7 +1,7 @@
-from repro.checkpoint.checkpointer import (CheckpointManager, latest_step,
-                                           load_checkpoint,
+from repro.checkpoint.checkpointer import (CheckpointManager, checkpoint_meta,
+                                           latest_step, load_checkpoint,
                                            load_checkpoint_flat,
                                            save_checkpoint)
 
 __all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint",
-           "load_checkpoint_flat", "latest_step"]
+           "load_checkpoint_flat", "latest_step", "checkpoint_meta"]

@@ -48,8 +48,14 @@ def _flatten_with_paths(tree):
     return paths, leaves, treedef
 
 
-def save_checkpoint(root: str | Path, step: int, tree: Any) -> Path:
-    """Synchronous atomic save of a pytree of (possibly sharded) arrays."""
+def save_checkpoint(root: str | Path, step: int, tree: Any,
+                    meta: Optional[dict] = None) -> Path:
+    """Synchronous atomic save of a pytree of (possibly sharded) arrays.
+
+    ``meta`` (optional, JSON-serializable) rides inside the manifest —
+    schema versions, config fingerprints, anything a reader must check
+    before trusting the leaves (``checkpoint_meta`` reads it back without
+    touching the arrays)."""
     root = Path(root)
     root.mkdir(parents=True, exist_ok=True)
     for stale in root.glob("*.tmp-*"):
@@ -61,6 +67,8 @@ def save_checkpoint(root: str | Path, step: int, tree: Any) -> Path:
 
     paths, leaves, _ = _flatten_with_paths(tree)
     manifest = {"step": step, "leaves": []}
+    if meta is not None:
+        manifest["meta"] = meta
     for i, (path, leaf) in enumerate(zip(paths, leaves)):
         arr = np.asarray(jax.device_get(leaf))
         fname = f"leaf_{i:05d}.npy"
@@ -141,6 +149,21 @@ def load_checkpoint(root: str | Path, tree_like: Any,
     return treedef.unflatten(out), step
 
 
+def checkpoint_meta(root: str | Path,
+                    step: Optional[int] = None) -> Optional[dict]:
+    """The manifest's ``meta`` dict (None when absent) without loading
+    any leaf — how resuming services validate schema/config fingerprints
+    before paying for the array restore."""
+    root = Path(root)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {root}")
+    d = root / f"step_{step:09d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    return manifest.get("meta")
+
+
 def load_checkpoint_flat(root: str | Path, step: Optional[int] = None, *,
                          verify: bool = True) -> tuple[dict, int]:
     """Manifest-driven restore: ``{path: np.ndarray}`` with no ``tree_like``.
@@ -172,14 +195,14 @@ class CheckpointManager:
         self._worker: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
-    def save_async(self, step: int, tree: Any):
+    def save_async(self, step: int, tree: Any, meta: Optional[dict] = None):
         self.wait()
         host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)),
                                  tree)
 
         def work():
             try:
-                save_checkpoint(self.root, step, host_tree)
+                save_checkpoint(self.root, step, host_tree, meta=meta)
                 self._gc()
             except BaseException as e:   # noqa: BLE001 — surfaced in wait()
                 self._error = e
@@ -195,9 +218,9 @@ class CheckpointManager:
             err, self._error = self._error, None
             raise err
 
-    def save(self, step: int, tree: Any):
+    def save(self, step: int, tree: Any, meta: Optional[dict] = None):
         self.wait()
-        save_checkpoint(self.root, step, tree)
+        save_checkpoint(self.root, step, tree, meta=meta)
         self._gc()
 
     def restore(self, tree_like: Any, step: Optional[int] = None,

@@ -348,7 +348,7 @@ def cluster_sequential_topk(topk: TopKSim, table: SubtrajTable,
 def cluster_rounds_topk(topk: TopKSim, table: SubtrajTable, params: DSCParams,
                         *, max_rounds: int | None = None,
                         use_kernel: bool = False, with_rounds: bool = False,
-                        tiles=None):
+                        tiles=None, seed_resolved=None, seed_is_rep=None):
     """Round-parallel Algorithm 4 over neighbor lists.
 
     Same DAG recurrence and claim-max as ``cluster_rounds``, but every
@@ -358,6 +358,16 @@ def cluster_rounds_topk(topk: TopKSim, table: SubtrajTable, params: DSCParams,
     (``repro.kernels.cluster``); label-identical either way.  The list
     kernels tile rows only, so of ``tiles=(bu, bs)`` they consume ``bu``
     as their row tile (default 8).
+
+    ``seed_resolved`` / ``seed_is_rep`` ([S] bool) warm-start the rep
+    recurrence from a previous solve (streaming driver, DESIGN.md §13.4):
+    slots marked resolved enter round 0 already decided, with
+    ``seed_is_rep`` as their verdict.  Exactness is the caller's
+    obligation — the seeds must be a *visit-order prefix* of the current
+    instance whose (rank, potential, list row) inputs are unchanged from
+    the solve that produced them, in which case the recurrence resolves
+    them identically and the warm run's labels are bit-equal to a cold
+    run's.  The final claim-max is always recomputed in full.
     """
     from repro.kernels.cluster.ref import (topk_claim_max_ref,
                                            topk_round_scan_ref)
@@ -406,8 +416,12 @@ def cluster_rounds_topk(topk: TopKSim, table: SubtrajTable, params: DSCParams,
         resolved = resolved | frontier
         return resolved, is_rep, rounds + jnp.any(unresolved).astype(jnp.int32)
 
-    init = (~potential, jnp.zeros_like(potential),
-            jnp.zeros((), jnp.int32))
+    resolved0 = ~potential
+    rep0 = jnp.zeros_like(potential)
+    if seed_resolved is not None:
+        resolved0 = resolved0 | seed_resolved
+        rep0 = rep0 | (seed_is_rep & seed_resolved & potential)
+    init = (resolved0, rep0, jnp.zeros((), jnp.int32))
     if max_rounds is None:
         resolved, is_rep, rounds = jax.lax.while_loop(
             lambda st: ~jnp.all(st[0]), body, init)

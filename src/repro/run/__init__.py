@@ -15,13 +15,13 @@ from repro.run.faults import (FaultInjector, FaultPlan, InjectedCrash,
 from repro.run.rebalance import RebalancePolicy
 from repro.run.resilient import (EXIT_CODES, TELEMETRY_SCHEMA,
                                  CheckpointCorruption, ResilientResult,
-                                 read_telemetry, run_resilient,
+                                 Telemetry, read_telemetry, run_resilient,
                                  run_resilient_distributed)
 
 __all__ = [
     "FaultPlan", "FaultInjector", "InjectedCrash", "TransientFault",
     "RetriesExhausted", "retry_with_backoff", "CheckpointCorruption",
     "RebalancePolicy", "ResilientResult", "run_resilient",
-    "run_resilient_distributed", "read_telemetry", "TELEMETRY_SCHEMA",
-    "EXIT_CODES",
+    "run_resilient_distributed", "read_telemetry", "Telemetry",
+    "TELEMETRY_SCHEMA", "EXIT_CODES",
 ]

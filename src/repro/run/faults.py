@@ -23,6 +23,24 @@ Supported faults, all keyed on the runner's stage boundaries:
   consumes, so flagging and rebalance suggestions are testable without
   real slow hardware.
 
+Stream chaos (DESIGN.md §13.6) — the same plan scripts the streaming
+service's failure modes, keyed on the *submission batch index* (so a
+resumed run, which replays batches by absolute index, re-applies the
+identical transforms):
+
+* ``stream_late_burst=((batch, seconds), ...)`` — shift every record of
+  submission ``batch`` back in time by ``seconds`` (a late burst that the
+  watermark must count/drop or scoped-rejoin).
+* ``stream_dup_storm=(batch, ...)`` — duplicate every record of the
+  submission (quarantined as ``duplicate``).
+* ``stream_poison=((batch, index), ...)`` — overwrite record ``index`` of
+  the submission with NaN coordinates (a poison record).
+* ``stream_stall=(batch, ...)`` — suppress the window advance after this
+  submission (queue pressure / stalled-watermark scenarios).
+* ``crash_at_advance=N`` (>= 0) — raise :class:`InjectedCrash` on entry
+  to window advance ``N``, after the previous advance's snapshot landed;
+  the kill-and-resume parity suite drives this.
+
 Retry timing is injectable (``sleep=``/monotonic ``clock=``), so the
 exponential-backoff schedule is asserted in tests with zero real sleeping.
 """
@@ -32,6 +50,8 @@ import dataclasses
 import json
 from pathlib import Path
 from typing import Callable, Optional
+
+import numpy as np
 
 _STAGES = ("join", "segment", "similarity", "cluster", "refine")
 
@@ -58,6 +78,12 @@ class FaultPlan:
     corrupt_stage: str | None = None   # corrupt this stage's checkpoint
     corrupt_leaf: int = 0              # which stored leaf file to damage
     slow: tuple = ()                   # ((stage, partition, seconds), ...)
+    # --- stream chaos (keyed on absolute submission-batch index) ---
+    stream_late_burst: tuple = ()      # ((batch, seconds), ...)
+    stream_dup_storm: tuple = ()       # (batch, ...)
+    stream_poison: tuple = ()          # ((batch, record_index), ...)
+    stream_stall: tuple = ()           # (batch, ...) — skip the advance
+    crash_at_advance: int = -1         # die entering this window advance
 
     # ------------------------------------------------------------------ api
     def validate(self) -> "FaultPlan":
@@ -78,6 +104,22 @@ class FaultPlan:
             if (len(tuple(entry)) != 3 or tuple(entry)[0] not in _STAGES):
                 raise ValueError(f"slow entry {entry!r}: expected "
                                  "(stage, partition, seconds)")
+        for name, width in (("stream_late_burst", 2), ("stream_poison", 2)):
+            for entry in getattr(self, name):
+                e = tuple(entry)
+                if len(e) != width or int(e[0]) < 0:
+                    raise ValueError(f"{name} entry {entry!r}: expected "
+                                     f"a {width}-tuple keyed on a "
+                                     "non-negative batch index")
+        for name in ("stream_dup_storm", "stream_stall"):
+            for b in getattr(self, name):
+                if int(b) < 0:
+                    raise ValueError(f"{name} entry {b!r}: expected a "
+                                     "non-negative batch index")
+        if not isinstance(self.crash_at_advance, int) or \
+                self.crash_at_advance < -1:
+            raise ValueError("crash_at_advance must be an int >= -1 "
+                             f"(-1 disables), got {self.crash_at_advance!r}")
         return self
 
     def replace(self, **kw) -> "FaultPlan":
@@ -91,7 +133,10 @@ class FaultPlan:
     # --------------------------------------------------------- serialization
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
-        d["slow"] = [list(e) for e in self.slow]
+        for name in ("slow", "stream_late_burst", "stream_poison"):
+            d[name] = [list(e) for e in getattr(self, name)]
+        for name in ("stream_dup_storm", "stream_stall"):
+            d[name] = [int(b) for b in getattr(self, name)]
         return d
 
     @classmethod
@@ -104,8 +149,12 @@ class FaultPlan:
             raise ValueError(f"unknown FaultPlan fields {sorted(unknown)}; "
                              f"known fields: {sorted(names)}")
         d = dict(d)
-        if "slow" in d:
-            d["slow"] = tuple(tuple(e) for e in d["slow"])
+        for name in ("slow", "stream_late_burst", "stream_poison"):
+            if name in d:
+                d[name] = tuple(tuple(e) for e in d[name])
+        for name in ("stream_dup_storm", "stream_stall"):
+            if name in d:
+                d[name] = tuple(int(b) for b in d[name])
         return cls(**d).validate()
 
     def to_json(self) -> str:
@@ -167,6 +216,42 @@ class FaultInjector:
 
     def slowdown(self, stage: str, partition: int) -> float:
         return self.plan.slowdown(stage, partition)
+
+    # ------------------------------------------------------------ stream hooks
+    def on_stream_batch(self, batch_idx: int, recs):
+        """Apply the scripted dirty-stream transforms to submission
+        ``batch_idx`` (pure function of (plan, batch_idx, recs) — a
+        resumed run replaying the same batch reproduces the same dirt).
+        ``recs`` is a ``repro.stream.ingest.Records``; returns the same
+        type."""
+        from repro.stream.ingest import Records, concat_records
+        obj = np.array(recs.obj, np.int32)
+        x = np.array(recs.x, np.float32)
+        y = np.array(recs.y, np.float32)
+        t = np.array(recs.t, np.float32)
+        for b, seconds in self.plan.stream_late_burst:
+            if int(b) == batch_idx:
+                t = t - np.float32(seconds)
+        for b, idx in self.plan.stream_poison:
+            if int(b) == batch_idx and recs.n:
+                x[int(idx) % recs.n] = np.nan
+                y[int(idx) % recs.n] = np.nan
+        out = Records(obj, x, y, t)
+        if batch_idx in {int(b) for b in self.plan.stream_dup_storm}:
+            out = concat_records([out, out])
+        return out
+
+    def stall_batch(self, batch_idx: int) -> bool:
+        """True when the scripted queue-pressure slowdown suppresses the
+        window advance after submission ``batch_idx``."""
+        return batch_idx in {int(b) for b in self.plan.stream_stall}
+
+    def on_window_advance(self, advance_idx: int) -> None:
+        """Raise the scripted crash on entry to window advance
+        ``advance_idx`` (after the previous advance's snapshot landed)."""
+        if self.plan.crash_at_advance == advance_idx:
+            raise InjectedCrash(
+                f"injected crash at window advance {advance_idx}")
 
 
 def retry_with_backoff(fn: Callable, *, max_retries: int = 3,

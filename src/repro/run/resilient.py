@@ -90,6 +90,8 @@ EXIT_CODES = {
     "corruption": 4,
     "retries_exhausted": 5,
     "injected_crash": 6,
+    "poison": 7,          # PoisonRecord under on_dirty="fail" (stream)
+    "backpressure": 8,    # BackpressureOverflow / WatermarkStall (stream)
 }
 
 
@@ -160,6 +162,12 @@ class _Telemetry:
                 f.write(json.dumps(ev) + "\n")
                 f.flush()
                 os.fsync(f.fileno())
+
+
+# public name: the streaming service writes its events (window_advanced,
+# record_quarantined, backpressure, late_dropped) through the same
+# fsynced JSONL writer and schema as the batch runner
+Telemetry = _Telemetry
 
 
 def read_telemetry(path) -> list[dict]:

@@ -1,0 +1,25 @@
+"""Streaming ingestion + windowed incremental DSC (DESIGN.md §13).
+
+``repro.stream.ingest`` admits raw point records and quarantines dirty
+ones (per-reason counters, bounded log, ``repair|drop|fail`` policy);
+``repro.stream.window`` owns the bounded-lateness watermark, the bounded
+staging queue and the backpressure policy; ``repro.stream.driver`` is the
+long-running incremental DSC service: per window advance it does delta
+bbox-index updates, delta joins of only the dirty rows, standing
+``[S, K+1]`` neighbor-list merges, warm-started round-parallel
+clustering, and periodic full-state snapshots through the checkpoint
+store so a killed service resumes bit-identically.
+"""
+from repro.stream.ingest import (QUARANTINE_REASONS, Ingestor, PoisonRecord,
+                                 Records, concat_records, take_records)
+from repro.stream.window import (BackpressureOverflow, WatermarkStall,
+                                 WindowManager)
+from repro.stream.driver import (STREAM_SNAPSHOT_SCHEMA, StreamConfig,
+                                 StreamDriver)
+
+__all__ = [
+    "Records", "concat_records", "take_records", "Ingestor",
+    "PoisonRecord", "QUARANTINE_REASONS", "WindowManager",
+    "BackpressureOverflow", "WatermarkStall", "StreamConfig",
+    "StreamDriver", "STREAM_SNAPSHOT_SCHEMA",
+]
